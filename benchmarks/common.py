@@ -1,0 +1,96 @@
+"""Shared helpers for the paper-figure benchmarks.
+
+All searches share a per-(net, arch, mode, strategy) result cache so the
+six Section V-A2 comparison points reuse mappings exactly the way the
+paper defines them:
+  Best Original          — searched on sequential latency, scored sequential
+  Best Original Overlap  — same mappings, scored with overlap
+  Original Transform     — same mappings, scored with transformation
+  Best Overlap           — searched on overlapped latency
+  Overlap Transform      — Best Overlap mappings + transformation
+  Best Transform         — searched on transformed latency (Fast-OverlaPIM)
+"""
+from __future__ import annotations
+
+import functools
+import os
+import time
+from typing import Dict, List, Tuple
+
+from repro.core import (SearchConfig, describe, dram_pim, evaluate_chain,
+                        optimize_network, reram_pim)
+
+QUICK = os.environ.get("BENCH_FULL", "0") != "1"
+
+N_CANDIDATES = 24 if QUICK else 64
+MAX_STEPS = 8192 if QUICK else 16384
+SEED = 1
+
+_cache: Dict = {}
+
+
+def search(net: str, arch_key: str = "dram2", mode: str = "original",
+           strategy: str = "forward", n_candidates: int = None,
+           max_steps: int = None):
+    key = (net, arch_key, mode, strategy, n_candidates, max_steps)
+    if key in _cache:
+        return _cache[key]
+    arch = make_arch(arch_key)
+    desc = describe(net)
+    refine = 0
+    if strategy.endswith("+refine"):
+        strategy, refine = strategy[:-len("+refine")], 1
+    cfg = SearchConfig(n_candidates=n_candidates or N_CANDIDATES,
+                       seed=SEED, max_steps=max_steps or MAX_STEPS,
+                       mode=mode, strategy=strategy,
+                       refine_passes=refine)
+    res = optimize_network(desc.layers, desc.edges, arch, cfg)
+    _cache[key] = (res, desc)
+    return _cache[key]
+
+
+def make_arch(key: str):
+    if key == "dram1":
+        return dram_pim(channels_per_layer=1)
+    if key == "dram2":
+        return dram_pim(channels_per_layer=2)
+    if key == "dram4":
+        return dram_pim(channels_per_layer=4)
+    if key == "reram":
+        return reram_pim(tiles_per_layer=2, blocks_per_tile=8,
+                         columns_per_block=1024)
+    raise KeyError(key)
+
+
+def comparison_points(net: str, arch_key: str = "dram2",
+                      strategy: str = "forward") -> Dict[str, float]:
+    """All six Section V-A2 points, in ms."""
+    ro, desc = search(net, arch_key, "original", strategy)
+    rv, _ = search(net, arch_key, "overlap", strategy)
+    rt, _ = search(net, arch_key, "transform", strategy)
+    orig_maps = [l.mapping for l in ro.layers]
+    ovl_maps = [l.mapping for l in rv.layers]
+    return {
+        "best_original": ro.total_ns / 1e6,
+        "best_original_overlap": evaluate_chain(
+            orig_maps, desc.edges, "overlap").total_ns / 1e6,
+        "original_transform": evaluate_chain(
+            orig_maps, desc.edges, "transform").total_ns / 1e6,
+        "best_overlap": rv.total_ns / 1e6,
+        "overlap_transform": evaluate_chain(
+            ovl_maps, desc.edges, "transform").total_ns / 1e6,
+        "best_transform": rt.total_ns / 1e6,
+    }
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.3f},{derived}"
+
+
+def timed(fn, *args, repeats: int = 1, **kw) -> Tuple[float, object]:
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeats
+    return dt * 1e6, out

@@ -1,0 +1,69 @@
+"""Aggregate the dry-run JSONs into the EXPERIMENTS.md roofline table."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_cells(mesh: str = "16x16", plan: str = "tp") -> List[Dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("mesh") == mesh and rec.get("plan", "tp") == plan:
+            out.append(rec)
+    return out
+
+
+def roofline_rows(mesh: str = "16x16") -> List[str]:
+    rows = []
+    for rec in load_cells(mesh):
+        name = f"roofline_{rec['arch']}_{rec['shape']}_{mesh}"
+        if rec.get("status") != "ok":
+            rows.append(f"{name},0.000,{rec.get('status', 'missing')}")
+            continue
+        r = rec["roofline"]
+        total = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        frac = r["compute_s"] / total if total else 0.0
+        rows.append(
+            f"{name},{rec['compile_s'] * 1e6:.0f},"
+            f"compute_s={r['compute_s']:.3e};memory_s={r['memory_s']:.3e};"
+            f"collective_s={r['collective_s']:.3e};"
+            f"bottleneck={r['bottleneck']};roofline_frac={frac:.3f};"
+            f"useful_flops_ratio={rec['useful_flops_ratio']:.2f};"
+            f"peak_GiB={rec['memory']['peak_bytes_per_device'] / 2**30:.2f}"
+        )
+    return rows
+
+
+def markdown_table(mesh: str = "16x16") -> str:
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | "
+        "bottleneck | roofline frac | MODEL/HLO flops | peak GiB |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in load_cells(mesh):
+        if rec.get("status") != "ok":
+            lines.append(
+                f"| {rec['arch']} | {rec['shape']} | — | — | — | "
+                f"{rec.get('status', '?')} | — | — | — |")
+            continue
+        r = rec["roofline"]
+        total = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        frac = r["compute_s"] / total if total else 0.0
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} | {r['compute_s']:.2e} | "
+            f"{r['memory_s']:.2e} | {r['collective_s']:.2e} | "
+            f"{r['bottleneck']} | {frac:.2f} | "
+            f"{rec['useful_flops_ratio']:.2f} | "
+            f"{rec['memory']['peak_bytes_per_device'] / 2**30:.1f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown_table())

@@ -1,0 +1,46 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV. Set BENCH_FULL=1 for the full-budget (paper-scale) search runs.
+import sys
+import time
+
+
+def main() -> None:
+    from . import paper_figs, bench_kernels, roofline_report
+
+    benches = [
+        paper_figs.fig4_motivation,
+        paper_figs.fig10_overall,
+        paper_figs.fig11_vs_overlapim,
+        paper_figs.fig12_perlayer,
+        paper_figs.fig13_memcap,
+        paper_figs.fig14_runtime,
+        paper_figs.fig15_search_methods,
+        paper_figs.fig16_reram,
+        paper_figs.fig17_bert,
+        paper_figs.sec4f_dataspace_generation,
+        bench_kernels.kernels,
+    ]
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    failures = 0
+    for bench in benches:
+        try:
+            for row in bench():
+                print(row, flush=True)
+        except Exception as e:  # keep the suite going; report at the end
+            failures += 1
+            print(f"{bench.__name__},0.000,ERROR:{e!r}", flush=True)
+    # roofline rows come from the dry-run artifacts (if present)
+    try:
+        for row in roofline_report.roofline_rows("16x16"):
+            print(row, flush=True)
+    except Exception as e:
+        print(f"roofline_report,0.000,ERROR:{e!r}", flush=True)
+    print(f"# total_wall_s={time.time() - t0:.1f} failures={failures}",
+          flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,62 @@
+"""Scenario: use the Fast-OverlaPIM mapper to derive an overlap schedule,
+then execute it as pipeline parallelism on a JAX device mesh.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python examples/map_and_pipeline.py
+
+This is the DESIGN.md Section 3 level-2 adaptation end-to-end: the
+paper's transformation orders microbatch tiles by input-ready time; the
+wavefront pipeline executes them across mesh stages.
+"""
+import os
+
+if "xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+
+import jax                                              # noqa: E402
+import jax.numpy as jnp                                 # noqa: E402
+import numpy as np                                      # noqa: E402
+
+from repro.pipeline.overlap_pipeline import (           # noqa: E402
+    overlap_schedule, pipeline_forward, sequential_reference)
+
+
+def main():
+    n_stages = len(jax.devices())
+    mesh = jax.make_mesh((n_stages,), ("stage",))
+    d, n_micro = 64, 8
+
+    def stage_fn(p, x):
+        return jnp.tanh(x @ p["w"] + p["b"])
+
+    k = jax.random.PRNGKey(0)
+    params = {
+        "w": jax.random.normal(k, (n_stages, d, d)) * (1.0 / d ** 0.5),
+        "b": jnp.zeros((n_stages, d)),
+    }
+    x = jax.random.normal(jax.random.PRNGKey(1), (n_micro, 16, d))
+
+    # microbatch ready times (e.g. streamed request arrival) -> the
+    # paper's transformation gives the emission order
+    ready = np.array([3.0, 0.0, 5.0, 1.0, 7.0, 2.0, 6.0, 4.0])
+    order = overlap_schedule(ready)
+    print(f"stages={n_stages} microbatches={n_micro}")
+    print(f"ready times: {ready.tolist()}")
+    print(f"overlap-transformed emission order: {order.tolist()}")
+
+    y = pipeline_forward(stage_fn, params, x, mesh, axis="stage",
+                         order=order)
+    y_ref = sequential_reference(stage_fn, params, x)
+    err = float(jnp.abs(y - y_ref).max())
+    print(f"pipeline output matches sequential reference: "
+          f"max_err={err:.2e}")
+    ticks_pipe = n_micro + n_stages - 1
+    ticks_seq = n_micro * n_stages
+    print(f"wavefront ticks {ticks_pipe} vs sequential {ticks_seq} "
+          f"(= {ticks_seq / ticks_pipe:.1f}x overlap speedup at equal "
+          f"stage latency)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Serving example: batched generation with KV cache through the Engine.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch mamba2_780m]
+
+Uses the reduced smoke config of the chosen architecture (random
+weights — this demonstrates the serving path: prefill -> primed cache ->
+jitted single-token decode across a request batch).
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import model_zoo
+from repro.serve.engine import Engine, ServeConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo_1b", choices=list(ARCH_IDS))
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=24)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)
+    params = model_zoo.init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, scfg=ServeConfig(
+        max_seq=args.prompt_len + args.new_tokens + 1,
+        max_new_tokens=args.new_tokens,
+        temperature=args.temperature))
+
+    rng = np.random.RandomState(0)
+    prompts = rng.randint(0, cfg.vocab,
+                          (args.batch, args.prompt_len)).astype(np.int32)
+    t0 = time.time()
+    out = eng.generate(prompts)
+    dt = time.time() - t0
+    print(f"arch={args.arch} (smoke config, family={cfg.family})")
+    print(f"generated {out.shape} tokens in {dt:.2f}s "
+          f"({args.batch * args.new_tokens / dt:.1f} tok/s incl. "
+          f"compile)")
+    for i, row in enumerate(out):
+        print(f"  seq{i}: {row.tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""End-to-end training driver: train a small LM on the synthetic Markov
+stream with the full substrate (sharded step, AdamW, checkpointing,
+auto-resume).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+    PYTHONPATH=src python examples/train_lm.py --size 100m --steps 300 \
+        --ckpt /tmp/ckpt_100m     # the ~100M-param configuration
+
+The 100M config is the deliverable target; on this CPU container it runs
+at a few seconds/step — the default 'tiny' config demonstrates the same
+loss curve in ~2 minutes. Interrupting and re-running with the same
+--ckpt resumes from the newest checkpoint.
+"""
+import argparse
+import logging
+
+from repro.configs import get_config
+from repro.data.synthetic import DataConfig
+from repro.launch.mesh import make_host_mesh
+from repro.models.common import ModelConfig
+from repro.train.optimizer import OptimizerConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+SIZES = {
+    # ~1M params: CI-fast demonstration
+    "tiny": dict(n_layers=2, d_model=128, n_heads=4, n_kv_heads=4,
+                 d_ff=512, vocab=512),
+    # ~25M params
+    "25m": dict(n_layers=6, d_model=512, n_heads=8, n_kv_heads=8,
+                d_ff=2048, vocab=2048),
+    # ~100M params (the deliverable-scale config)
+    "100m": dict(n_layers=12, d_model=768, n_heads=12, n_kv_heads=12,
+                 d_ff=3072, vocab=32000),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--size", default="tiny", choices=sorted(SIZES))
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    logging.basicConfig(level=logging.INFO,
+                        format="%(asctime)s %(message)s")
+    cfg = ModelConfig(arch_id=f"train_lm_{args.size}", family="dense",
+                      **SIZES[args.size])
+    mesh = make_host_mesh(model=1)
+    trainer = Trainer(
+        cfg, mesh,
+        opt_cfg=OptimizerConfig(lr=args.lr, warmup_steps=20,
+                                total_steps=args.steps),
+        tcfg=TrainerConfig(steps=args.steps, ckpt_dir=args.ckpt,
+                           ckpt_every=50, log_every=10),
+        dcfg=DataConfig(batch=args.batch, seq=args.seq))
+    last = trainer.run()
+    first = trainer.metrics_history[0]
+    print(f"\nfirst logged loss: {first['loss']:.4f}  ->  "
+          f"final loss: {last['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Fast-OverlaPIM core: the paper's mapping-optimization framework."""
+from .arch import ArchSpec, HBMTiming, Level, dram_pim, reram_pim, tpu_spatial
+from .dataspace import (DataSpaces, generate_analytical, generate_exhaustive,
+                        locate_finish, locate_finish_exhaustive)
+from .interface import NetworkDesc, chain_edges, describe, optimize
+from .mapping import Loop, Mapping, divisors, heuristic_mapping, \
+    random_mapping
+from .overlap import (CoordMap, Edge, HeadFoldMap, HeadUnfoldMap,
+                      IdentityMap, WeightMap, overlapped_end,
+                      ready_steps_analytical, ready_steps_exhaustive,
+                      schedule_with_ready)
+from .perf_model import LayerPerf, analyze, step_latency_ns
+from .search import (MODES, STRATEGIES, LayerResult, NetworkResult,
+                     SearchConfig, evaluate_chain, optimize_network)
+from .transform import TransformResult, transform_schedule
+from .workload import (DIMS, OUTPUT_DIMS, REDUCTION_DIMS, LayerSpec,
+                       bert_encoder, conv, get_network, matmul, resnet18,
+                       resnet50, vgg16)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

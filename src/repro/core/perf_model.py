@@ -1,0 +1,111 @@
+"""PIM performance model (paper Section IV-C, Table I).
+
+Timeloop's model counts compute/read/write only; PIM needs the data
+movements of in-memory execution. Each MAC in a bank is modeled as
+(1) bit-serial element-wise multiplication, (2) read/write for operand
+transposition, (3) serial additions for reduction. A full n-bit addition is
+4n+1 activate-activate-precharge (AAP) operations; a multiplication is n
+sequential additions (Section IV-C). Configured architectures may pin
+add/mul latencies directly (Fig 6: DRAM add=196ns mul=980ns; Fig 7 ReRAM
+add=442ns mul=696ns) — the AAP-derived model is the fallback.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from .arch import ArchSpec
+from .mapping import Mapping
+from .workload import OUTPUT_DIMS, REDUCTION_DIMS
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerPerf:
+    """Latency/energy decomposition of one mapping (no overlap)."""
+
+    step_ns: float          # latency of one bank time step
+    n_steps: int
+    n_banks: int
+    compute_ns: float       # n_steps * step_ns
+    output_move_ns: float   # write outputs to next layer's input region
+    tile_move_ns: float     # movement of a single (bank, step) output tile
+    sequential_ns: float    # compute + output movement
+    energy_pj: float
+
+    @property
+    def total_ns(self) -> float:
+        return self.sequential_ns
+
+
+def step_latency_ns(mapping: Mapping) -> float:
+    arch = mapping.arch
+    t_add = arch.op_latency("add")
+    t_mul = arch.op_latency("mul")
+    timing = arch.timing
+
+    macs_step = mapping.macs_per_step()
+    cols = mapping.n_columns_used
+    macs_per_col = math.ceil(macs_step / cols)
+
+    # (1)+(3): bit-serial multiply + accumulate-add per MAC
+    mac_ns = t_mul + t_add
+    # (2): operand transposition — one row read + one row write per MAC
+    t_rw = timing.t_rcd + timing.t_cl
+    # cross-column partial-sum reduction (spatial reduction loops at target)
+    n_red = 1
+    out_cols = 1
+    ti = arch.target_index
+    for li, lp in mapping.nest:
+        if li == ti and lp.spatial:
+            if lp.dim in REDUCTION_DIMS:
+                n_red *= lp.size
+            else:
+                out_cols *= lp.size
+    red_ns = 0.0
+    if n_red > 1:
+        ext = mapping.tile_extent
+        out_elems = 1
+        for d in OUTPUT_DIMS:
+            out_elems *= ext[d]
+        out_per_col = math.ceil(out_elems / out_cols)
+        move_word = arch.word_bytes * arch.movement_ns_per_byte()
+        red_ns = math.ceil(math.log2(n_red)) * out_per_col * (
+            move_word + t_add)
+    return macs_per_col * (mac_ns + 2 * t_rw) + red_ns
+
+
+def analyze(mapping: Mapping) -> LayerPerf:
+    arch = mapping.arch
+    layer = mapping.layer
+    step_ns = step_latency_ns(mapping)
+    n_steps = mapping.n_steps
+    n_banks = mapping.n_banks
+    compute_ns = step_ns * n_steps
+
+    # inter-layer output->input data movement through channel links
+    chan_level = arch.levels[min(1, len(arch.levels) - 1)]
+    write_bw = chan_level.write_bw or 16.0
+    channels_used = 1
+    for li, lp in mapping.nest:
+        if li == 0 and lp.spatial:
+            channels_used *= lp.size
+    out_bytes = layer.output_elems * arch.word_bytes
+    output_move_ns = out_bytes / (write_bw * channels_used)
+
+    ext = mapping.tile_extent
+    tile_out = 1
+    for d in OUTPUT_DIMS:
+        tile_out *= ext[d]
+    tile_move_ns = tile_out * arch.word_bytes / write_bw
+
+    # energy: AAP-dominated bit-serial compute + IO for the movement
+    n = arch.word_bits
+    e_add = (4 * n + 1) * arch.timing.e_act
+    e_mac = (n + 1) * e_add  # mul = n serial adds, + 1 accumulate add
+    energy = layer.macs * e_mac + out_bytes * 8 * arch.timing.e_io
+
+    return LayerPerf(
+        step_ns=step_ns, n_steps=n_steps, n_banks=n_banks,
+        compute_ns=compute_ns, output_move_ns=output_move_ns,
+        tile_move_ns=tile_move_ns,
+        sequential_ns=compute_ns + output_move_ns, energy_pj=energy)

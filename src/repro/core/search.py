@@ -1,0 +1,302 @@
+"""Whole-network mapping search (paper Sections IV-J/K, V-B).
+
+Modes (the paper's comparison points, Section V-A2):
+  * ``original``  — Timeloop-style: best sequential latency, no overlap.
+  * ``overlap``   — search on overlapped latency (no transformation).
+  * ``transform`` — search on transformed overlapped latency
+                    (= Fast-OverlaPIM's "Best Transform").
+
+Strategies (Section IV-K): ``forward``, ``backward``, ``middle_output``
+(start at the layer with the largest P*Q*K), ``middle_overall`` (largest
+P*Q*C*K). Per layer the mapper samples a fixed number of valid candidate
+mappings (termination criterion "similar to Timeloop": a fixed number of
+valid mappings) and the succeeding/preceding layer is optimized against the
+fixed choice — the linear method of Section IV-J (k*N instead of k^N).
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .arch import ArchSpec
+from .mapping import Mapping, heuristic_mapping, random_mapping
+from .overlap import (Edge, overlapped_end, ready_steps_analytical,
+                      schedule_with_ready, stream_tail_fraction)
+from .perf_model import LayerPerf, analyze
+from .transform import transform_schedule
+from .workload import LayerSpec
+
+MODES = ("original", "overlap", "transform")
+STRATEGIES = ("forward", "backward", "middle_output", "middle_overall")
+
+
+@dataclasses.dataclass
+class SearchConfig:
+    n_candidates: int = 48
+    seed: int = 0
+    max_steps: int = 16384
+    mode: str = "transform"
+    strategy: str = "forward"
+    use_exhaustive_overlap: bool = False  # OverlaPIM's analysis (slow)
+    # beyond-paper: coordinate-descent passes re-optimizing each layer
+    # against both committed neighbors (0 = the paper's linear search)
+    refine_passes: int = 0
+    refine_candidates: int = 8
+
+    def __post_init__(self):
+        assert self.mode in MODES, self.mode
+        assert self.strategy in STRATEGIES, self.strategy
+
+
+@dataclasses.dataclass
+class LayerResult:
+    mapping: Mapping
+    perf: LayerPerf
+    start_ns: float
+    end_ns: float
+    finish_ns: np.ndarray          # (nb, nt) absolute space finish times
+    transformed: bool = False
+    moved_frac: float = 0.0
+
+    @property
+    def latency_ns(self) -> float:
+        return self.end_ns - self.start_ns
+
+
+@dataclasses.dataclass
+class NetworkResult:
+    layers: List[LayerResult]
+    total_ns: float
+    mode: str
+    per_layer_ns: List[float] = dataclasses.field(default_factory=list)
+
+    def summary(self) -> Dict[str, float]:
+        return {"total_ns": self.total_ns,
+                "n_layers": len(self.layers),
+                "mode": self.mode}
+
+
+# ---------------------------------------------------------------------------
+# Chain evaluation for a FIXED set of mappings.
+# ---------------------------------------------------------------------------
+
+def _ready_matrix(idx: int, mapping: Mapping, edges: Sequence[Edge],
+                  done: Dict[int, LayerResult]) -> np.ndarray:
+    """Absolute ready time per (bank, step) of ``mapping``, max over
+    dependency edges (paper Section IV-G: latest producing space)."""
+    nb, nt = mapping.n_banks, mapping.n_steps
+    ready = np.zeros((nb, nt), dtype=np.float64)
+    for e in edges:
+        prod = done[e.producer]
+        step, ready0 = ready_steps_analytical(prod.mapping, mapping, e.cmap)
+        # synchronous-time-step semantics (paper Fig 3): a step completes
+        # when all banks complete it
+        fin_step = prod.finish_ns.max(axis=0)
+        r = fin_step[step] + prod.perf.tile_move_ns
+        r = np.where(ready0, 0.0, r)
+        ready = np.maximum(ready, r)
+    return ready
+
+
+def evaluate_chain(mappings: Sequence[Mapping],
+                   edges: Sequence[Sequence[Edge]],
+                   mode: str) -> NetworkResult:
+    """Run the whole network with fixed mappings under a given mode."""
+    done: Dict[int, LayerResult] = {}
+    per_layer = []
+    for i, m in enumerate(mappings):
+        perf = analyze(m)
+        nb, nt = m.n_banks, m.n_steps
+        if mode == "original":
+            start = max((done[e.producer].end_ns for e in edges[i]),
+                        default=0.0)
+            t = np.arange(nt, dtype=np.float64)
+            fin = start + np.broadcast_to(
+                (t + 1) * perf.step_ns, (nb, nt)).copy()
+            end = start + perf.compute_ns + perf.output_move_ns
+            res = LayerResult(m, perf, start, end, fin)
+        else:
+            ready = _ready_matrix(i, m, edges[i], done)
+            start = float(ready.min()) if ready.size else 0.0
+            if mode == "transform" and edges[i]:
+                tr = transform_schedule(ready, perf.step_ns,
+                                        perf.tile_move_ns)
+                fin = tr.finish_ns
+                end = tr.end_ns + perf.output_move_ns
+                res = LayerResult(m, perf, start, end, fin,
+                                  transformed=True,
+                                  moved_frac=tr.moved_frac)
+            else:
+                fin = schedule_with_ready(ready, perf.step_ns)
+                end = float(fin[:, -1].max()) + perf.output_move_ns
+                res = LayerResult(m, perf, start, end, fin)
+        done[i] = res
+        per_layer.append(res.latency_ns)
+    total = max(r.end_ns for r in done.values()) if done else 0.0
+    return NetworkResult(layers=[done[i] for i in range(len(mappings))],
+                         total_ns=total, mode=mode, per_layer_ns=per_layer)
+
+
+# ---------------------------------------------------------------------------
+# Per-layer candidate generation + greedy linear search.
+# ---------------------------------------------------------------------------
+
+def candidates(layer: LayerSpec, arch: ArchSpec,
+               cfg: SearchConfig, salt: int) -> List[Mapping]:
+    rng = random.Random((cfg.seed << 20) ^ salt)
+    out = [heuristic_mapping(layer, arch, cfg.max_steps)]
+    seen = {out[0].blocks}
+    for _ in range(cfg.n_candidates - 1):
+        m = random_mapping(layer, arch, rng, cfg.max_steps)
+        if m.blocks not in seen:
+            seen.add(m.blocks)
+            out.append(m)
+    return out
+
+
+def _score_forward(i, m, edges, done, mode, has_consumer=True) -> float:
+    perf = analyze(m)
+    if mode == "original":
+        base = max((done[e.producer].end_ns for e in edges[i]), default=0.0)
+        return base + perf.sequential_ns
+    # successor-friendliness: penalize production orders whose outputs all
+    # complete at the end (they deny the next layer any overlap)
+    tail = stream_tail_fraction(m) if has_consumer else 0.0
+    penalty = tail * perf.compute_ns
+    if not edges[i]:
+        return perf.sequential_ns + penalty
+    ready = _ready_matrix(i, m, edges[i], done)
+    if mode == "transform":
+        tr = transform_schedule(ready, perf.step_ns, perf.tile_move_ns)
+        return tr.end_ns + perf.output_move_ns + penalty
+    return overlapped_end(ready, perf.step_ns) + perf.output_move_ns \
+        + penalty
+
+
+def _commit(i, m, edges, done, mode) -> LayerResult:
+    perf = analyze(m)
+    nb, nt = m.n_banks, m.n_steps
+    if mode == "original" or not edges[i]:
+        start = max((done[e.producer].end_ns for e in edges[i]),
+                    default=0.0) if mode == "original" else 0.0
+        t = np.arange(nt, dtype=np.float64)
+        fin = start + np.broadcast_to((t + 1) * perf.step_ns,
+                                      (nb, nt)).copy()
+        end = start + perf.compute_ns + perf.output_move_ns
+        return LayerResult(m, perf, start, end, fin)
+    ready = _ready_matrix(i, m, edges[i], done)
+    start = float(ready.min())
+    if mode == "transform":
+        tr = transform_schedule(ready, perf.step_ns, perf.tile_move_ns)
+        return LayerResult(m, perf, start, tr.end_ns + perf.output_move_ns,
+                           tr.finish_ns, transformed=True,
+                           moved_frac=tr.moved_frac)
+    fin = schedule_with_ready(ready, perf.step_ns)
+    return LayerResult(m, perf, start,
+                       float(fin[:, -1].max()) + perf.output_move_ns, fin)
+
+
+def _consumers_of(edges: Sequence[Sequence[Edge]], i: int) -> List[int]:
+    return [j for j, es in enumerate(edges)
+            if any(e.producer == i for e in es)]
+
+
+def _score_backward(i, m, edges, fixed: Dict[int, Mapping], mode) -> float:
+    """Score a producer candidate by the end time of its (fixed-mapping)
+    consumers, assuming the producer starts stall-free at t=0."""
+    perf = analyze(m)
+    done = {i: LayerResult(
+        m, perf, 0.0, perf.sequential_ns,
+        np.broadcast_to((np.arange(m.n_steps) + 1.0) * perf.step_ns,
+                        (m.n_banks, m.n_steps)).copy())}
+    cons = [j for j in _consumers_of(edges, i) if j in fixed]
+    if mode == "original" or not cons:
+        return perf.sequential_ns
+    worst = 0.0
+    for j in cons:
+        mc = fixed[j]
+        pc = analyze(mc)
+        es = [e for e in edges[j] if e.producer == i]
+        ready = _ready_matrix(j, mc, es, done)
+        if mode == "transform":
+            worst = max(worst, transform_schedule(
+                ready, pc.step_ns, pc.tile_move_ns).end_ns)
+        else:
+            worst = max(worst, overlapped_end(ready, pc.step_ns))
+    return worst
+
+
+def optimize_network(layers: Sequence[LayerSpec],
+                     edges: Sequence[Sequence[Edge]],
+                     arch: ArchSpec,
+                     cfg: Optional[SearchConfig] = None) -> NetworkResult:
+    cfg = cfg or SearchConfig()
+    n = len(layers)
+    order, backward_part = _visit_order(layers, cfg.strategy)
+
+    chosen: Dict[int, Mapping] = {}
+    done: Dict[int, LayerResult] = {}
+    for i in order:
+        cands = candidates(layers[i], arch, cfg, salt=i)
+        if i in backward_part:
+            best = min(cands,
+                       key=lambda m: _score_backward(i, m, edges, chosen,
+                                                     cfg.mode))
+        else:
+            # forward scoring needs producers committed; producers missing
+            # (backward half not yet visited) fall back to sequential score
+            avail = all(e.producer in done for e in edges[i])
+            has_cons = bool(_consumers_of(edges, i))
+            if avail:
+                best = min(cands, key=lambda m: _score_forward(
+                    i, m, edges, done, cfg.mode, has_cons))
+            else:
+                best = min(cands, key=lambda m: analyze(m).sequential_ns)
+        chosen[i] = best
+        if all(e.producer in done for e in edges[i]):
+            done[i] = _commit(i, best, edges, done, cfg.mode)
+    result = evaluate_chain([chosen[i] for i in range(n)], edges,
+                            cfg.mode)
+    # coordinate-descent refinement (beyond-paper): re-optimize each layer
+    # against BOTH its committed producer and consumer — the paper's
+    # linear pass is myopic about successors (Section IV-K motivates this)
+    for _ in range(cfg.refine_passes if cfg.mode != "original" else 0):
+        improved = False
+        for i in range(n):
+            rcfg = dataclasses.replace(
+                cfg, n_candidates=cfg.refine_candidates)
+            cands = candidates(layers[i], arch, rcfg, salt=i + 7919)
+            cands.append(chosen[i])
+            best_m, best_t = chosen[i], result.total_ns
+            for m in cands:
+                trial = chosen.copy()
+                trial[i] = m
+                r = evaluate_chain([trial[j] for j in range(n)], edges,
+                                   cfg.mode)
+                if r.total_ns < best_t - 1e-9:
+                    best_m, best_t = m, r.total_ns
+            if best_m is not chosen[i]:
+                chosen[i] = best_m
+                improved = True
+        result = evaluate_chain([chosen[i] for i in range(n)], edges,
+                                cfg.mode)
+        if not improved:
+            break
+    return result
+
+
+def _visit_order(layers: Sequence[LayerSpec],
+                 strategy: str) -> Tuple[List[int], set]:
+    n = len(layers)
+    if strategy == "forward":
+        return list(range(n)), set()
+    if strategy == "backward":
+        return list(range(n - 1, -1, -1)), set(range(n - 1))
+    key = ((lambda l: l.output_size()) if strategy == "middle_output"
+           else (lambda l: l.overall_size()))
+    mid = max(range(n), key=lambda i: key(layers[i]))
+    order = [mid] + list(range(mid - 1, -1, -1)) + list(range(mid + 1, n))
+    return order, set(range(mid))

@@ -1,0 +1,2 @@
+"""Pallas TPU kernels for the compute hot-spots (validated in
+interpret mode against pure-jnp oracles; see tests/test_kernels.py)."""

@@ -1,0 +1,3 @@
+from .flash_attn import flash_attention
+from .ops import flash_attention_op, hbm_bytes_flash, hbm_bytes_unfused
+from .ref import attention_ref

@@ -1,0 +1,26 @@
+"""jit'd public wrapper for the flash attention kernel."""
+import functools
+
+import jax
+
+from .flash_attn import flash_attention
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "tq", "tk", "interpret"))
+def flash_attention_op(q, k, v, causal=True, tq=256, tk=256,
+                       interpret=False):
+    return flash_attention(q, k, v, causal=causal, tq=tq, tk=tk,
+                           interpret=interpret)
+
+
+def hbm_bytes_flash(bh, sq, skv, hd, itemsize=2):
+    """q,k,v read once (k/v per q-tile sweep amortized by grid), o written."""
+    return (bh * sq * hd * 2 + bh * skv * hd * 2 * (sq // 256)) * itemsize
+
+
+def hbm_bytes_unfused(bh, sq, skv, hd, itemsize=2):
+    """scores + softmax round-trips dominate."""
+    return (bh * sq * hd * 3 + bh * skv * hd * 2
+            + 4 * bh * sq * skv  # scores written+read, f32-ish
+            ) * itemsize

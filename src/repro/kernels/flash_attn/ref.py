@@ -1,0 +1,20 @@
+"""Pure-jnp oracle: exact softmax attention (causal, GQA via repeat)."""
+import jax.numpy as jnp
+import jax
+
+
+def attention_ref(q, k, v, causal=True):
+    """q [BH, Sq, hd]; k/v [BKV, Skv, hd]."""
+    bh, sq, hd = q.shape
+    bkv, skv, _ = k.shape
+    g = bh // bkv
+    kk = jnp.repeat(k, g, axis=0)
+    vv = jnp.repeat(v, g, axis=0)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) / (hd ** 0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, skv), bool), k=skv - sq)
+        s = jnp.where(mask[None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqk,bkd->bqd", p, vv.astype(jnp.float32))
+    return o.astype(q.dtype)

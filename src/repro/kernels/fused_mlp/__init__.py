@@ -1,0 +1,3 @@
+from .fused_mlp import fused_mlp
+from .ops import fused_mlp_op, hbm_bytes_fused, hbm_bytes_unfused
+from .ref import fused_mlp_ref

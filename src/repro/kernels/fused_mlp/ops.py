@@ -1,0 +1,25 @@
+"""jit'd public wrapper for the overlap-fused MLP kernel."""
+import functools
+
+import jax
+
+from .fused_mlp import fused_mlp
+from .ref import fused_mlp_ref
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tf", "interpret"))
+def fused_mlp_op(x, w1, w3, w2, tm=128, tf=512, interpret=False):
+    return fused_mlp(x, w1, w3, w2, tm=tm, tf=tf, interpret=interpret)
+
+
+def hbm_bytes_fused(m, k, f, itemsize=2):
+    """HBM traffic model: x re-read per F tile is amortized by tiling; w
+    read once; y written once."""
+    n_ftiles = max(f // 512, 1)
+    return (m * k * n_ftiles + 3 * k * f + m * k) * itemsize
+
+
+def hbm_bytes_unfused(m, k, f, itemsize=2):
+    """Unfused: x read twice, h1/h3 written+read, h written+read, w once,
+    y written."""
+    return (2 * m * k + 3 * k * f + 4 * m * f + m * f + m * k) * itemsize

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the overlap-fused SwiGLU MLP."""
+import jax
+import jax.numpy as jnp
+
+
+def fused_mlp_ref(x, w1, w3, w2):
+    h = jax.nn.silu(jnp.dot(x, w1, preferred_element_type=jnp.float32))
+    h = h * jnp.dot(x, w3, preferred_element_type=jnp.float32)
+    y = jnp.dot(h.astype(x.dtype), w2,
+                preferred_element_type=jnp.float32)
+    return y.astype(x.dtype)

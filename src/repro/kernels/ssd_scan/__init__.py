@@ -1,0 +1,3 @@
+from .ops import ssd_scan_op
+from .ref import ssd_ref
+from .ssd_scan import ssd_scan

@@ -1,0 +1,11 @@
+"""jit'd public wrapper for the SSD chunk-scan kernel."""
+import functools
+
+import jax
+
+from .ssd_scan import ssd_scan
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_op(x, dt, a, bm, cm, chunk=128, interpret=False):
+    return ssd_scan(x, dt, a, bm, cm, chunk=chunk, interpret=interpret)

@@ -1,0 +1,28 @@
+"""Oracle: naive sequential SSD recurrence (per time step, pure jnp)."""
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, a, bm, cm):
+    """x [BH, S, P]; dt [BH, S, 1]; a [BH, 1, 1]; bm/cm [BH, S, N].
+
+    h_t = exp(dt_t * a) h_{t-1} + dt_t * B_t (x) x_t ; y_t = C_t . h_t
+    """
+    bh, s, p = x.shape
+    n = bm.shape[-1]
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp            # [P],[1],[N],[N] per bh batch
+        da = jnp.exp(dtt * a[:, 0, 0])   # [BH]
+        h = h * da[:, None, None] + jnp.einsum(
+            "bn,b,bp->bnp", bt, dtt, xt)
+        y = jnp.einsum("bn,bnp->bp", ct, h)
+        return h, y
+
+    h0 = jnp.zeros((bh, n, p), jnp.float32)
+    xs = (x.transpose(1, 0, 2).astype(jnp.float32),
+          dt.transpose(1, 0, 2)[..., 0].astype(jnp.float32),
+          bm.transpose(1, 0, 2).astype(jnp.float32),
+          cm.transpose(1, 0, 2).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2).astype(x.dtype)

@@ -1,0 +1,323 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite_8b \
+        --shape train_4k --multi-pod
+
+Produces experiments/dryrun/<arch>__<shape>__<mesh>.json with
+memory_analysis, cost_analysis, the collective schedule and the roofline
+terms (EXPERIMENTS.md Sections Dry-run/Roofline read these files).
+"""
+# The host platform must present 512 placeholder devices BEFORE any jax
+# import — jax locks the device count on first init.
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from typing import Dict, Optional  # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ARCH_IDS, SHAPES, cell_status, get_config  # noqa
+from repro.models import model_zoo  # noqa: E402
+from repro.models.common import ModelConfig  # noqa: E402
+from repro.launch import steps as steps_lib  # noqa: E402
+from repro.launch.mesh import (batch_shard_size, data_axes,  # noqa
+                               make_production_mesh)
+from repro.launch.sharding import (batch_specs, cache_specs,  # noqa
+                                   fsdp_param_specs, opt_specs,
+                                   param_specs, to_shardings)
+from repro.roofline.analysis import (from_compiled, model_flops,  # noqa
+                                     xla_cost_reference)
+from repro.train.optimizer import init_opt_state  # noqa: E402
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+# archs whose fp32 train state needs FSDP param sharding to fit 16 GB/chip
+FSDP_ARCHS = {"llava_next_34b", "deepseek_moe_16b", "granite_8b"}
+# per-device microbatch rows for grad accumulation in train_4k cells
+# (n_micro = global_batch / (batch_shards * this))
+PER_DEVICE_MICRO = {"llava_next_34b": 1}
+DEFAULT_PER_DEVICE_MICRO = 2
+
+
+def _bf16_shapes(tree):
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(
+            x.shape, jnp.bfloat16 if jnp.issubdtype(x.dtype, jnp.floating)
+            else x.dtype), tree)
+
+
+def _count_params(tree) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(tree))
+
+
+def _active_params(cfg: ModelConfig, tree) -> int:
+    total = _count_params(tree)
+    if cfg.family != "moe":
+        return total
+    expert = sum(
+        int(x.size) for p, x in
+        jax.tree_util.tree_flatten_with_path(tree)[0]
+        if any(getattr(k, "key", "") == "moe" for k in p)
+        and p[-1].key in ("w1", "w2", "w3"))
+    return total - expert + expert * cfg.top_k // cfg.n_experts
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               mesh=None, plan: str = "tp",
+               capacity_factor=None, remat_policy=None) -> Dict:
+    cfg = get_config(arch)
+    if capacity_factor is not None:
+        cfg = cfg.with_(capacity_factor=capacity_factor)
+    if remat_policy is not None:
+        cfg = cfg.with_(remat_policy=remat_policy)
+    shape = SHAPES[shape_name]
+    mesh = mesh if mesh is not None else make_production_mesh(
+        multi_pod=multi_pod)
+    nchips = mesh.devices.size
+    # batch-sharding axes: "dp" plans also use the model axis for batch
+    # (dropped again when the global batch doesn't divide across it)
+    dp = data_axes(mesh) + (("model",) if plan == "dp" else ())
+    bss = 1
+    for a in dp:
+        bss *= mesh.shape[a]
+    if shape.global_batch % bss:
+        dp = data_axes(mesh)
+        bss = 1
+        for a in dp:
+            bss *= mesh.shape[a]
+    if cfg.family == "moe":
+        cfg = cfg.with_(moe_shards=bss, moe_data_axes=tuple(dp),
+                        moe_expert_axis="model")
+    t0 = time.time()
+
+    pshapes = model_zoo.param_shapes(cfg)
+    if shape.kind == "train":
+        if plan == "tp" and arch in FSDP_ARCHS:
+            pspecs = fsdp_param_specs(pshapes, mesh)
+        else:
+            pspecs = param_specs(pshapes, mesh, plan)
+        oshapes = jax.eval_shape(init_opt_state, pshapes)
+        zaxes = ("data", "model") if plan in ("dp", "ep") else ("data",)
+        ospecs = {"mu": opt_specs(pspecs, pshapes, mesh, zaxes),
+                  "nu": opt_specs(pspecs, pshapes, mesh, zaxes),
+                  "step": P()}
+        pdm = PER_DEVICE_MICRO.get(arch, DEFAULT_PER_DEVICE_MICRO)
+        n_micro = max(1, shape.global_batch // (bss * pdm))
+        mb = shape.global_batch // n_micro
+        bshapes = {
+            "tokens": jax.ShapeDtypeStruct(
+                (n_micro, mb, shape.seq_len), jnp.int32),
+            "labels": jax.ShapeDtypeStruct(
+                (n_micro, mb, shape.seq_len), jnp.int32),
+        }
+        bspecs = {"tokens": P(None, dp, None), "labels": P(None, dp, None)}
+        if cfg.family == "audio":
+            bshapes["frames"] = jax.ShapeDtypeStruct(
+                (n_micro, mb, cfg.enc_frames, cfg.d_model), jnp.bfloat16)
+            bspecs["frames"] = P(None, dp, None, None)
+        step = steps_lib.make_grad_accum_train_step(
+            cfg, n_micro, acc_specs=to_shardings(ospecs["mu"], mesh))
+        jitted = jax.jit(
+            step,
+            in_shardings=(to_shardings(pspecs, mesh),
+                          to_shardings(ospecs, mesh),
+                          to_shardings(bspecs, mesh)),
+            out_shardings=(to_shardings(pspecs, mesh),
+                           to_shardings(ospecs, mesh), None),
+            donate_argnums=(0, 1))
+        with mesh:
+            lowered = jitted.lower(pshapes, oshapes, bshapes)
+        tokens = shape.global_batch * shape.seq_len
+        training = True
+    elif shape.kind == "prefill":
+        pshapes = _bf16_shapes(pshapes)
+        pspecs = param_specs(pshapes, mesh)
+        bshapes = {"tokens": jax.ShapeDtypeStruct(
+            (shape.global_batch, shape.seq_len), jnp.int32)}
+        bspecs = batch_specs(cfg, shape.global_batch, mesh, "prefill")
+        if cfg.family == "audio":
+            bshapes["frames"] = jax.ShapeDtypeStruct(
+                (shape.global_batch, cfg.enc_frames, cfg.d_model),
+                jnp.bfloat16)
+        step = steps_lib.make_prefill_step(cfg, shape.seq_len)
+        jitted = jax.jit(
+            step,
+            in_shardings=(to_shardings(pspecs, mesh),
+                          to_shardings(bspecs, mesh)))
+        with mesh:
+            lowered = jitted.lower(pshapes, bshapes)
+        tokens = shape.global_batch * shape.seq_len
+        training = False
+    else:  # decode
+        pshapes = _bf16_shapes(pshapes)
+        pspecs = param_specs(pshapes, mesh)
+        cshapes = jax.eval_shape(
+            lambda: model_zoo.init_cache(cfg, shape.global_batch,
+                                         shape.seq_len))
+        cspecs = cache_specs(cfg, shape.global_batch, mesh, cshapes)
+        tshapes = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+        tspecs = batch_specs(cfg, shape.global_batch, mesh, "decode")
+        step = steps_lib.make_decode_step(cfg)
+        jitted = jax.jit(
+            step,
+            in_shardings=(to_shardings(pspecs, mesh),
+                          to_shardings(cspecs, mesh),
+                          NamedSharding(mesh, tspecs)),
+            out_shardings=(None, to_shardings(cspecs, mesh)),
+            donate_argnums=(1,))
+        with mesh:
+            lowered = jitted.lower(pshapes, cshapes, tshapes)
+        tokens = shape.global_batch  # one token per sequence
+        training = False
+
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    # The CPU backend emulates bf16 dots by converting operands to f32;
+    # those hoisted whole-tensor converts don't exist on TPU (native bf16
+    # MXU). Quantify them so the TPU peak estimate is visible.
+    f32_hoist = 0
+    import re as _re
+    for line in compiled.as_text().splitlines():
+        m = _re.match(r"\s*(?:ROOT )?%[\w.\-]+ = f32\[([\d,]+)\][^=]*"
+                      r" convert\(", line)
+        if m:
+            n = 1
+            for d in m.group(1).split(","):
+                n *= int(d)
+            if n * 4 >= 2 ** 28:
+                f32_hoist += n * 4
+    rl, colls = from_compiled(compiled, nchips)
+    n_params = _count_params(pshapes)
+    n_active = _active_params(cfg, pshapes)
+    mf = model_flops(n_params, tokens, n_active, training)
+    # embedding params don't contribute matmul FLOPs; ratio is indicative
+    useful = mf / max(rl.flops * nchips, 1.0) if rl.flops else 0.0
+
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": nchips,
+        "kind": shape.kind,
+        "n_params": n_params, "n_active_params": n_active,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "output_bytes_per_device": getattr(
+                mem, "output_size_in_bytes", 0),
+            "temp_bytes_per_device": getattr(
+                mem, "temp_size_in_bytes", 0),
+            "argument_bytes_per_device": getattr(
+                mem, "argument_size_in_bytes", 0),
+            "peak_bytes_per_device": (
+                getattr(mem, "temp_size_in_bytes", 0)
+                + getattr(mem, "output_size_in_bytes", 0)),
+            "cpu_f32_dot_emulation_bytes": f32_hoist,
+            "tpu_peak_estimate_bytes": max(
+                0, getattr(mem, "temp_size_in_bytes", 0)
+                + getattr(mem, "output_size_in_bytes", 0) - f32_hoist),
+        },
+        "roofline": rl.as_dict(),
+        "collectives": {"counts": colls.counts,
+                        "bytes": colls.bytes_by_kind},
+        "xla_cost_reference": xla_cost_reference(compiled),
+        "model_flops": mf,
+        "useful_flops_ratio": useful,
+    }
+    return result
+
+
+def run_and_save(arch: str, shape_name: str, multi_pod: bool,
+                 out_dir: str, mesh=None, plan: str = "tp",
+                 capacity_factor=None, remat_policy=None) -> Optional[Dict]:
+    ok, why = cell_status(arch, shape_name)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = "" if plan == "tp" else f"__{plan}"
+    path = os.path.join(
+        out_dir, f"{arch}__{shape_name}__{mesh_name}{suffix}.json")
+    if not ok:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": why}
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"[skip] {arch} {shape_name} {mesh_name}: {why}")
+        return rec
+    try:
+        rec = lower_cell(arch, shape_name, multi_pod, mesh=mesh,
+                         plan=plan, capacity_factor=capacity_factor,
+                         remat_policy=remat_policy)
+        rec["status"] = "ok"
+        rec["plan"] = plan
+    except Exception as e:  # a failing cell is a bug — surface it loudly
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": f"FAIL: {e}",
+               "traceback": traceback.format_exc()}
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    if rec["status"] == "ok":
+        r = rec["roofline"]
+        print(f"[ok]   {arch:22s} {shape_name:12s} {mesh_name:8s} "
+              f"compile={rec['compile_s']:6.1f}s "
+              f"peak={rec['memory']['peak_bytes_per_device']/2**30:6.2f}"
+              f"GiB (tpu~"
+              f"{rec['memory']['tpu_peak_estimate_bytes']/2**30:.2f}) "
+              f"bottleneck={r['bottleneck']:10s} "
+              f"(c={r['compute_s']:.3e} m={r['memory_s']:.3e} "
+              f"coll={r['collective_s']:.3e})")
+    else:
+        print(f"[FAIL] {arch} {shape_name} {mesh_name}: "
+              f"{rec['status'][:200]}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--plan", default="tp", choices=["tp", "dp", "ep"])
+    ap.add_argument("--capacity-factor", type=float, default=None)
+    ap.add_argument("--remat-policy", default=None,
+                    choices=["full", "dots", "mlp"])
+    ap.add_argument("--out", default=os.path.abspath(OUT_DIR))
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    pods = []
+    if args.multi_pod or args.all:
+        pods.append(True)
+    if args.single_pod or args.all or not pods:
+        pods.insert(0, False)
+
+    failures = 0
+    meshes = {mp: make_production_mesh(multi_pod=mp) for mp in pods}
+    for mp in pods:
+        for a in archs:
+            for s in shapes:
+                rec = run_and_save(a, s, mp, args.out, mesh=meshes[mp],
+                                   plan=args.plan,
+                                   capacity_factor=args.capacity_factor,
+                                   remat_policy=args.remat_policy)
+                if rec and str(rec.get("status", "")).startswith("FAIL"):
+                    failures += 1
+    print(f"\ndry-run complete; {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

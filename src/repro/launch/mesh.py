@@ -1,0 +1,46 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before any jax import; tests see the
+default single device).
+
+Production target: TPU v5e pods — 16x16 = 256 chips per pod, 2 pods via
+DCN for the multi-pod dry-run. Axes: ("data", "model") single-pod;
+("pod", "data", "model") multi-pod, with "pod" used as an outer
+data-parallel (or pipeline-stage) axis.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: Optional[int] = None, model: int = 1):
+    """Small mesh over whatever devices this host actually has (tests)."""
+    n = len(jax.devices())
+    if data is None:
+        data = n // model
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def data_axes(mesh) -> Tuple[str, ...]:
+    """Axes that shard the batch dimension."""
+    return (("pod", "data") if "pod" in mesh.axis_names else ("data",))
+
+
+def model_size(mesh) -> int:
+    return mesh.shape["model"]
+
+
+def batch_shard_size(mesh) -> int:
+    n = 1
+    for a in data_axes(mesh):
+        n *= mesh.shape[a]
+    return n

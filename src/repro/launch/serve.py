@@ -1,0 +1,50 @@
+"""Serving launcher.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch olmo_1b \
+        --ckpt /tmp/ck_olmo --batch 4 --new-tokens 16
+
+Restores params from the newest checkpoint (random init without --ckpt)
+and serves a batch of synthetic prompts through the Engine.
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import model_zoo
+from repro.serve.engine import Engine, ServeConfig
+from repro.train import checkpoint as ckpt_lib
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo_1b", choices=list(ARCH_IDS))
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    params = model_zoo.init_params(cfg, jax.random.PRNGKey(0))
+    if args.ckpt:
+        res = ckpt_lib.restore(args.ckpt, {"params": jax.eval_shape(
+            lambda: params)})
+        if res:
+            params = res[1]["params"]
+            print(f"restored checkpoint step {res[0]}")
+    eng = Engine(cfg, params, scfg=ServeConfig(
+        max_seq=args.prompt_len + args.new_tokens + 1,
+        max_new_tokens=args.new_tokens, temperature=args.temperature))
+    prompts = np.random.RandomState(0).randint(
+        0, cfg.vocab, (args.batch, args.prompt_len)).astype(np.int32)
+    out = eng.generate(prompts)
+    for i, row in enumerate(out):
+        print(f"seq{i}: {row.tolist()}")
+
+
+if __name__ == "__main__":
+    main()

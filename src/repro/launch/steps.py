@@ -1,0 +1,91 @@
+"""jit-able step functions per (config, shape kind)."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model_zoo
+from repro.models.common import ModelConfig
+from repro.train.optimizer import OptimizerConfig, adamw_update, \
+    init_opt_state
+
+PyTree = Any
+
+
+def make_train_step(cfg: ModelConfig,
+                    opt_cfg: Optional[OptimizerConfig] = None):
+    opt_cfg = opt_cfg or OptimizerConfig()
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: model_zoo.loss_fn(cfg, p, batch),
+            has_aux=True)(params)
+        params, opt_state, om = adamw_update(opt_cfg, params, grads,
+                                             opt_state)
+        return params, opt_state, {"loss": loss, **metrics, **om}
+
+    return train_step
+
+
+def make_grad_accum_train_step(cfg: ModelConfig, n_micro: int,
+                               opt_cfg: Optional[OptimizerConfig] = None,
+                               acc_specs: Optional[PyTree] = None):
+    """Gradient accumulation over ``n_micro`` microbatches (scan) — the
+    backward of microbatch i overlaps XLA-scheduled collectives of i-1.
+
+    ``acc_specs`` (a PartitionSpec tree mirroring params) pins the fp32
+    accumulator's sharding — without it XLA may replicate the accumulator
+    across the model axis (observed 162 GiB/device on deepseek_moe_16b).
+    """
+    opt_cfg = opt_cfg or OptimizerConfig()
+
+    def train_step(params, opt_state, batch):
+        # batch leaves are [n_micro, b/n_micro, ...]
+        def constrain(tree):
+            if acc_specs is None:
+                return tree
+            return jax.tree_util.tree_map(
+                lambda x, s: jax.lax.with_sharding_constraint(x, s),
+                tree, acc_specs)
+
+        def micro(carry, mb):
+            gsum, lsum = carry
+            (loss, _), grads = jax.value_and_grad(
+                lambda p: model_zoo.loss_fn(cfg, p, mb),
+                has_aux=True)(params)
+            gsum = constrain(jax.tree_util.tree_map(
+                lambda a, g: a + g.astype(jnp.float32), gsum, grads))
+            return (gsum, lsum + loss), None
+
+        zeros = constrain(jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params))
+        (gsum, lsum), _ = jax.lax.scan(micro, (zeros, 0.0), batch)
+        grads = jax.tree_util.tree_map(lambda g: g / n_micro, gsum)
+        params, opt_state, om = adamw_update(opt_cfg, params, grads,
+                                             opt_state)
+        return params, opt_state, {"loss": lsum / n_micro, **om}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_seq: int):
+    def prefill_step(params, batch):
+        if cfg.family == "audio":
+            return model_zoo.prefill(cfg, params, batch["tokens"],
+                                     max_seq, frames=batch["frames"])
+        return model_zoo.prefill(cfg, params, batch["tokens"], max_seq)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def serve_step(params, cache, tokens):
+        return model_zoo.decode_step(cfg, params, cache, tokens)
+    return serve_step
+
+
+def opt_state_shapes(cfg: ModelConfig) -> PyTree:
+    pshapes = model_zoo.param_shapes(cfg)
+    return jax.eval_shape(init_opt_state, pshapes)

@@ -1,0 +1,3 @@
+"""JAX model zoo for the assigned architectures."""
+from .common import ModelConfig
+from . import model_zoo, inputs

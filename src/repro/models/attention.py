@@ -1,0 +1,201 @@
+"""GQA attention with RoPE: blockwise (flash-style) training path + KV-cache
+decode path.
+
+GQA is computed natively on grouped queries ([B, S, KV, G, hd] against
+[B, S, KV, hd]) — the KV tensor is NEVER repeated to H heads (repeating a
+32k llava cache would materialize 60 GB per layer). The training/prefill
+path never materializes the [S, S] score matrix either: it scans KV
+chunks with an online softmax, so 32k prefill compiles with O(S * chunk)
+live memory.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, apply_rope, dense_init, rope_freqs, \
+    split_keys
+
+KV_CHUNK = 1024
+
+
+def init_attn(cfg: ModelConfig, key, d_model: Optional[int] = None,
+              n_heads: Optional[int] = None,
+              n_kv: Optional[int] = None, dtype=jnp.float32) -> Dict:
+    d = d_model or cfg.d_model
+    h = n_heads or cfg.n_heads
+    kv = n_kv or cfg.n_kv_heads
+    hd = cfg.hd
+    ks = split_keys(key, ["wq", "wk", "wv", "wo"])
+    return {
+        "wq": dense_init(ks["wq"], d, h * hd, dtype),
+        "wk": dense_init(ks["wk"], d, kv * hd, dtype),
+        "wv": dense_init(ks["wv"], d, kv * hd, dtype),
+        "wo": dense_init(ks["wo"], h * hd, d, dtype),
+    }
+
+
+def flash_attention(q, k, v, causal: bool, q_offset: int = 0,
+                    chunk: int = KV_CHUNK):
+    """Online-softmax attention with native GQA.
+
+    q [B, Sq, H, hd]; k/v [B, Skv, KV, hd] with H = KV * G.
+    Returns [B, Sq, H, hd]."""
+    b, sq, h, hd = q.shape
+    skv, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    chunk = min(chunk, skv)
+    while skv % chunk:
+        chunk -= 1  # largest divisor of skv below the target chunk
+    n_chunks = skv // chunk
+    scale = jnp.asarray(1.0 / (hd ** 0.5), q.dtype)
+    qf = (q * scale).reshape(b, sq, kv, g, hd)
+    q_pos = q_offset + jnp.arange(sq)
+
+    kc = k.reshape(b, n_chunks, chunk, kv, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, kv, hd).transpose(1, 0, 2, 3, 4)
+
+    def body(carry, xs):
+        acc, m, l = carry                  # [b,sq,kv,g,hd],[b,kv,g,sq]x2
+        kb, vb, ci = xs
+        # operands stay in model dtype; accumulate fp32 (upcasting the
+        # operands would hoist fp32 copies of K/V out of the scan)
+        s = jnp.einsum("bqkgd,bckd->bkgqc", qf, kb.astype(q.dtype),
+                       preferred_element_type=jnp.float32)
+        if causal:
+            k_pos = ci * chunk + jnp.arange(chunk)
+            mask = q_pos[:, None] >= k_pos[None, :]
+            s = jnp.where(mask[None, None, None, :, :], s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(jnp.isfinite(s), p, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bkgqc,bckd->bqkgd", p.astype(q.dtype),
+                        vb.astype(q.dtype),
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr.transpose(0, 3, 1, 2)[..., None] + pv
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((b, sq, kv, g, hd), jnp.float32)
+    m0 = jnp.full((b, kv, g, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, kv, g, sq), jnp.float32)
+    # remat per KV chunk: backward recomputes the [.., sq, chunk] score
+    # block instead of saving n_chunks of them (7 GiB/layer at 4k train)
+    (acc, m, l), _ = jax.lax.scan(
+        jax.checkpoint(body), (acc0, m0, l0),
+        (kc, vc, jnp.arange(n_chunks)))
+    norm = l.transpose(0, 3, 1, 2)[..., None]
+    out = acc / jnp.maximum(norm, 1e-20)
+    return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def attention(cfg: ModelConfig, params: Dict, x, *, causal=True,
+              positions=None, kv_x=None, kv_positions=None,
+              n_heads=None, n_kv=None):
+    """Full (pre)fill attention. ``kv_x`` enables cross-attention."""
+    h = n_heads or cfg.n_heads
+    kv = n_kv or cfg.n_kv_heads
+    hd = cfg.hd
+    b, s, _ = x.shape
+    src = kv_x if kv_x is not None else x
+    sk = src.shape[1]
+    q = (x @ params["wq"].astype(x.dtype)).reshape(b, s, h, hd)
+    k = (src @ params["wk"].astype(x.dtype)).reshape(b, sk, kv, hd)
+    v = (src @ params["wv"].astype(x.dtype)).reshape(b, sk, kv, hd)
+    if positions is None:
+        positions = jnp.arange(s)
+    if kv_x is None and cfg.use_rope:  # self-attention: RoPE on both
+        cos, sin = rope_freqs(cfg, positions)
+        q = apply_rope(q, cos, sin)
+        kcos, ksin = rope_freqs(
+            cfg, kv_positions if kv_positions is not None else positions)
+        k = apply_rope(k, kcos, ksin)
+    out = flash_attention(q, k, v, causal=causal)
+    return out.reshape(b, s, h * hd) @ params["wo"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV-cache decode path
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(b: int, s_max: int, n_kv: int, hd: int,
+                  dtype=jnp.bfloat16):
+    return {"k": jnp.zeros((b, s_max, n_kv, hd), dtype),
+            "v": jnp.zeros((b, s_max, n_kv, hd), dtype)}
+
+
+def prefill_into_cache(cfg: ModelConfig, params, x, cache, *,
+                       n_heads=None, n_kv=None):
+    """Run prefill attention AND write k/v into the cache at [0, S)."""
+    h = n_heads or cfg.n_heads
+    kv = n_kv or cfg.n_kv_heads
+    hd = cfg.hd
+    b, s, _ = x.shape
+    q = (x @ params["wq"].astype(x.dtype)).reshape(b, s, h, hd)
+    k = (x @ params["wk"].astype(x.dtype)).reshape(b, s, kv, hd)
+    v = (x @ params["wv"].astype(x.dtype)).reshape(b, s, kv, hd)
+    if cfg.use_rope:
+        pos = jnp.arange(s)
+        cos, sin = rope_freqs(cfg, pos)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    cache = {
+        "k": jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0)),
+        "v": jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)),
+    }
+    out = flash_attention(q, k, v, causal=True)
+    y = out.reshape(b, s, h * hd) @ params["wo"].astype(x.dtype)
+    return y, cache
+
+
+def gqa_decode_attend(q, ck, cv, pos):
+    """q [B,1,H,hd] against cache [B,S,KV,hd] without repeating KV.
+
+    Inputs stay in cache dtype with fp32 ACCUMULATION
+    (preferred_element_type) — upcasting the cache operand would make XLA
+    materialize an fp32 copy of the whole stacked cache outside the layer
+    scan (observed +100 GiB on llava decode_32k)."""
+    b, _, h, hd = q.shape
+    s_max, kv = ck.shape[1], ck.shape[2]
+    g = h // kv
+    scale = jnp.asarray(1.0 / (hd ** 0.5), q.dtype)
+    qg = (q * scale).reshape(b, kv, g, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, ck.astype(q.dtype),
+                   preferred_element_type=jnp.float32)
+    mask = jnp.arange(s_max)[None, None, None, :] <= pos
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(q.dtype),
+                     cv.astype(q.dtype),
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h * hd)
+
+
+def decode_attention(cfg: ModelConfig, params, x, cache, pos, *,
+                     n_heads=None, n_kv=None,
+                     rope: Optional[bool] = None):
+    """One-token decode: x [B, 1, D]; cache k/v [B, S_max, kv, hd]."""
+    h = n_heads or cfg.n_heads
+    kv = n_kv or cfg.n_kv_heads
+    hd = cfg.hd
+    b = x.shape[0]
+    q = (x @ params["wq"].astype(x.dtype)).reshape(b, 1, h, hd)
+    k = (x @ params["wk"].astype(x.dtype)).reshape(b, 1, kv, hd)
+    v = (x @ params["wv"].astype(x.dtype)).reshape(b, 1, kv, hd)
+    if cfg.use_rope if rope is None else rope:
+        cos, sin = rope_freqs(cfg, jnp.asarray(pos)[None])
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    ck = jax.lax.dynamic_update_slice(
+        cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+    cv = jax.lax.dynamic_update_slice(
+        cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+    out = gqa_decode_attend(q, ck, cv, pos)
+    y = out.astype(x.dtype) @ params["wo"].astype(x.dtype)
+    return y, {"k": ck, "v": cv}

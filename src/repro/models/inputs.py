@@ -1,0 +1,50 @@
+"""Batch construction: real arrays for tests/training, ShapeDtypeStructs
+for the dry-run (no allocation)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ModelConfig
+
+PyTree = Any
+
+
+def train_batch_shapes(cfg: ModelConfig, batch: int,
+                       seq: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    out = {
+        "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+    }
+    if cfg.family == "audio":
+        out["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.enc_frames, cfg.d_model),
+            jnp.dtype(cfg.compute_dtype))
+    return out
+
+
+def decode_token_shapes(cfg: ModelConfig,
+                        batch: int) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((batch,), jnp.int32)
+
+
+def make_train_batch(cfg: ModelConfig, batch: int, seq: int,
+                     seed: int = 0) -> Dict:
+    rng = np.random.RandomState(seed)
+    toks = rng.randint(0, cfg.vocab, size=(batch, seq + 1)).astype(np.int32)
+    out = {"tokens": jnp.asarray(toks[:, :-1]),
+           "labels": jnp.asarray(toks[:, 1:])}
+    if cfg.family == "audio":
+        out["frames"] = jnp.asarray(
+            rng.randn(batch, cfg.enc_frames, cfg.d_model),
+            dtype=cfg.compute_dtype)
+    return out
+
+
+def make_decode_tokens(cfg: ModelConfig, batch: int, seed: int = 0):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(rng.randint(0, cfg.vocab, size=(batch,)),
+                       dtype=jnp.int32)

@@ -1,0 +1,66 @@
+"""Family dispatch: one API across all 10 architectures.
+
+``audio`` (encoder-decoder) dispatches to ``encdec``; everything else to
+``lm``. All functions are pure and jit-friendly.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax.numpy as jnp
+
+from . import encdec, lm
+from .common import ModelConfig
+
+PyTree = Any
+
+
+def init_params(cfg: ModelConfig, key) -> PyTree:
+    if cfg.family == "audio":
+        return encdec.init_params(cfg, key)
+    return lm.init_params(cfg, key)
+
+
+def param_shapes(cfg: ModelConfig) -> PyTree:
+    if cfg.family == "audio":
+        return encdec.param_shapes(cfg)
+    return lm.param_shapes(cfg)
+
+
+def loss_fn(cfg: ModelConfig, params: PyTree, batch: Dict):
+    if cfg.family == "audio":
+        return encdec.loss_fn(cfg, params, batch)
+    return lm.loss_fn(cfg, params, batch)
+
+
+def forward(cfg: ModelConfig, params: PyTree, batch: Dict):
+    if cfg.family == "audio":
+        return encdec.forward(cfg, params, batch["tokens"],
+                              batch["frames"])
+    return lm.forward(cfg, params, batch["tokens"],
+                      batch.get("extra_embeds"))
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> PyTree:
+    if cfg.family == "audio":
+        return encdec.init_cache(cfg, batch, max_seq, cfg.enc_frames)
+    return lm.init_cache(cfg, batch, max_seq)
+
+
+def decode_step(cfg: ModelConfig, params: PyTree, cache: PyTree, tokens):
+    if cfg.family == "audio":
+        return encdec.decode_step(cfg, params, cache, tokens)
+    return lm.decode_step(cfg, params, cache, tokens)
+
+
+def prefill(cfg: ModelConfig, params: PyTree, tokens, max_seq: int,
+            frames=None):
+    if cfg.family == "audio":
+        cache = encdec.init_cache(cfg, tokens.shape[0], max_seq,
+                                  cfg.enc_frames)
+        cache = encdec.prime_cross_cache(cfg, params, cache, frames)
+        # teacher-force the prompt through decode steps is wasteful; run
+        # forward once and only keep the cache of self-attn prefill
+        logits, _ = encdec.forward(cfg, params, tokens, frames)
+        return logits[:, -1, :], cache
+    return lm.prefill(cfg, params, tokens, max_seq)

@@ -1,0 +1,196 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Chunked SSD: intra-chunk quadratic (attention-like) term + inter-chunk
+recurrent state passed with ``lax.scan``. Projections for z/x/B/C/dt are
+separate matmuls (rather than one fused in_proj) so every output axis
+shards cleanly on the model mesh axis.
+
+Decode is the O(1)-per-token recurrence on the [H, N, P] state — this is
+what makes the ``long_500k`` cell runnable for the SSM/hybrid archs.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, dense_init, rmsnorm, split_keys
+
+
+def init_mamba2(cfg: ModelConfig, key, dtype=jnp.float32) -> Dict:
+    d = cfg.d_model
+    di = cfg.d_inner
+    h = cfg.ssm_heads
+    gn = cfg.ssm_groups * cfg.ssm_state
+    kw = cfg.ssm_conv
+    ks = split_keys(key, ["wz", "wx", "wB", "wC", "wdt", "conv_x",
+                          "conv_B", "conv_C", "wo", "A", "dt"])
+    return {
+        "wz": dense_init(ks["wz"], d, di, dtype),
+        "wx": dense_init(ks["wx"], d, di, dtype),
+        "wB": dense_init(ks["wB"], d, gn, dtype),
+        "wC": dense_init(ks["wC"], d, gn, dtype),
+        "wdt": dense_init(ks["wdt"], d, h, dtype),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "conv_x": (jax.random.normal(ks["conv_x"], (kw, di), jnp.float32)
+                   * (1.0 / kw)).astype(dtype),
+        "conv_B": (jax.random.normal(ks["conv_B"], (kw, gn), jnp.float32)
+                   * (1.0 / kw)).astype(dtype),
+        "conv_C": (jax.random.normal(ks["conv_C"], (kw, gn), jnp.float32)
+                   * (1.0 / kw)).astype(dtype),
+        "A_log": jnp.zeros((h,), jnp.float32),       # A = -exp(A_log) = -1
+        "D": jnp.ones((h,), jnp.float32),
+        "gn_scale": jnp.ones((di,), jnp.float32),
+        "wo": dense_init(ks["wo"], di, d, dtype),
+    }
+
+
+def _causal_dw_conv(x, w):
+    """Depthwise causal 1D conv. x [B,S,W], w [K,W]."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(k))
+    return out
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int):
+    """SSD scan. x [B,S,H,P]; dt [B,S,H] (>0); A [H] (<0);
+    B,C [B,S,G,N]. Returns (y [B,S,H,P], final state [B,H,N,P])."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    nc = s // chunk
+    assert s % chunk == 0, (s, chunk)
+
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = jnp.repeat(B.reshape(b, nc, chunk, g, n), rep, axis=3)
+    Cc = jnp.repeat(C.reshape(b, nc, chunk, g, n), rep, axis=3)
+
+    dA = dtc * A[None, None, None, :]                 # [b,nc,L,h] (<0)
+    cum = jnp.cumsum(dA, axis=2)                      # inclusive cumsum
+    # intra-chunk: M[i,j] = (C_i . B_j) * exp(cum_i - cum_j) * dt_j, i>=j
+    scores = jnp.einsum("bcihn,bcjhn->bchij", Cc.astype(jnp.float32),
+                        Bc.astype(jnp.float32))
+    seg = cum[:, :, :, None, :].transpose(0, 1, 4, 2, 3) \
+        - cum[:, :, None, :, :].transpose(0, 1, 4, 2, 3)  # [b,nc,h,i,j]
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(causal[None, None, None], jnp.exp(seg), 0.0)
+    M = scores * decay * dtc.transpose(0, 1, 3, 2)[:, :, :, None, :]
+    y_diag = jnp.einsum("bchij,bcjhp->bcihp", M, xc.astype(jnp.float32))
+
+    # chunk summary states: S_c = sum_j exp(cum_L - cum_j) dt_j B_j x_j^T
+    dec_state = jnp.exp(cum[:, :, -1:, :] - cum)      # [b,nc,L,h]
+    Sc = jnp.einsum("bcjhn,bcjh,bcjhp->bchnp",
+                    Bc.astype(jnp.float32), dec_state * dtc,
+                    xc.astype(jnp.float32))
+    chunk_decay = jnp.exp(cum[:, :, -1, :])           # [b,nc,h]
+
+    def scan_body(carry, inp):
+        s_c, dec = inp                                 # [b,h,n,p], [b,h]
+        out = carry                                    # state BEFORE chunk
+        new = carry * dec[..., None, None] + s_c
+        return new, out
+
+    init = jnp.zeros((b, h, n, p), jnp.float32)
+    final, prev_states = jax.lax.scan(
+        scan_body, init,
+        (Sc.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # [b,nc,h,n,p]
+
+    y_off = jnp.einsum("bcihn,bcih,bchnp->bcihp",
+                       Cc.astype(jnp.float32), jnp.exp(cum),
+                       prev_states)
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y.astype(x.dtype), final
+
+
+def mamba2_block(cfg: ModelConfig, params: Dict, x):
+    """Training/prefill path. x [B,S,D] -> [B,S,D]."""
+    b, s, d = x.shape
+    h, p = cfg.ssm_heads, cfg.ssm_head_dim
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    z = x @ params["wz"].astype(x.dtype)
+    xin = x @ params["wx"].astype(x.dtype)
+    Bv = x @ params["wB"].astype(x.dtype)
+    Cv = x @ params["wC"].astype(x.dtype)
+    dt = x @ params["wdt"].astype(x.dtype)
+
+    xin = jax.nn.silu(_causal_dw_conv(xin, params["conv_x"].astype(x.dtype)))
+    Bv = jax.nn.silu(_causal_dw_conv(Bv, params["conv_B"].astype(x.dtype)))
+    Cv = jax.nn.silu(_causal_dw_conv(Cv, params["conv_C"].astype(x.dtype)))
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"][None, None, :])
+    A = -jnp.exp(params["A_log"])
+    y, _ = ssd_chunked(xin.reshape(b, s, h, p), dt, A,
+                       Bv.reshape(b, s, g, n), Cv.reshape(b, s, g, n),
+                       chunk=min(cfg.ssm_chunk, s))
+    y = y + params["D"].astype(x.dtype)[None, None, :, None] \
+        * xin.reshape(b, s, h, p)
+    y = y.reshape(b, s, cfg.d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), params["gn_scale"])
+    return y @ params["wo"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode path: O(1) state update per token.
+# ---------------------------------------------------------------------------
+
+def init_ssm_cache(cfg: ModelConfig, b: int, dtype=jnp.float32) -> Dict:
+    h, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    gn = cfg.ssm_groups * cfg.ssm_state
+    kw = cfg.ssm_conv
+    return {
+        "state": jnp.zeros((b, h, n, p), jnp.float32),
+        "conv_x": jnp.zeros((b, kw - 1, cfg.d_inner), dtype),
+        "conv_B": jnp.zeros((b, kw - 1, gn), dtype),
+        "conv_C": jnp.zeros((b, kw - 1, gn), dtype),
+    }
+
+
+def _conv_step(buf, xt, w):
+    """buf [B,K-1,W]; xt [B,W]; w [K,W] -> (y [B,W], new buf)."""
+    full = jnp.concatenate([buf, xt[:, None, :]], axis=1)   # [B,K,W]
+    y = jnp.einsum("bkw,kw->bw", full, w)
+    return y, full[:, 1:, :]
+
+
+def mamba2_decode(cfg: ModelConfig, params: Dict, x, cache):
+    """x [B,1,D] -> (y [B,1,D], new cache)."""
+    b = x.shape[0]
+    h, p = cfg.ssm_heads, cfg.ssm_head_dim
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    xt = x[:, 0, :]
+    z = xt @ params["wz"].astype(x.dtype)
+    xin = xt @ params["wx"].astype(x.dtype)
+    Bv = xt @ params["wB"].astype(x.dtype)
+    Cv = xt @ params["wC"].astype(x.dtype)
+    dt = xt @ params["wdt"].astype(x.dtype)
+
+    xin, cbx = _conv_step(cache["conv_x"], xin,
+                          params["conv_x"].astype(x.dtype))
+    Bv, cbB = _conv_step(cache["conv_B"], Bv,
+                         params["conv_B"].astype(x.dtype))
+    Cv, cbC = _conv_step(cache["conv_C"], Cv,
+                         params["conv_C"].astype(x.dtype))
+    xin, Bv, Cv = map(jax.nn.silu, (xin, Bv, Cv))
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"][None])
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt * A[None, :])                            # [B,H]
+    xh = xin.reshape(b, h, p).astype(jnp.float32)
+    Bh = jnp.repeat(Bv.reshape(b, g, n), h // g, axis=1)
+    Ch = jnp.repeat(Cv.reshape(b, g, n), h // g, axis=1)
+    new_state = cache["state"] * dA[..., None, None] + \
+        jnp.einsum("bhn,bh,bhp->bhnp", Bh.astype(jnp.float32), dt, xh)
+    y = jnp.einsum("bhn,bhnp->bhp", Ch.astype(jnp.float32), new_state)
+    y = y + params["D"][None, :, None] * xh
+    y = y.reshape(b, cfg.d_inner).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), params["gn_scale"])
+    y = (y @ params["wo"].astype(x.dtype))[:, None, :]
+    cache = {"state": new_state, "conv_x": cbx, "conv_B": cbB,
+             "conv_C": cbC}
+    return y, cache

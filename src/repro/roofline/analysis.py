@@ -1,0 +1,155 @@
+"""Three-term roofline from a compiled dry-run artifact.
+
+    compute term    = HLO_FLOPs   / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes   / (chips * HBM_bw)
+    collective term = coll_bytes  / (chips * link_bw)
+
+``cost_analysis()`` supplies FLOPs and bytes accessed; collective bytes
+are NOT in cost_analysis, so we parse the post-optimization HLO text and
+sum operand bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute.
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter",
+                "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of all arrays in an HLO result type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    bytes_by_kind: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    counts = {k: 0 for k in _COLLECTIVES}
+    nbytes = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # result = TYPE collective-op(...)
+        m = re.match(r"(?:ROOT\s+)?[%\w.\-]+\s*=\s*(\([^)]*\)|[^=(]+?)\s+"
+                     r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                     r"collective-permute)(?:-start|-done)?\(", s)
+        if not m:
+            continue
+        if "-done(" in s:
+            continue  # count async pairs once (at -start)
+        kind = m.group(2)
+        counts[kind] += 1
+        nbytes[kind] += _shape_bytes(m.group(1))
+    return CollectiveStats(counts=counts, bytes_by_kind=nbytes)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # whole-program HLO FLOPs
+    hbm_bytes: float             # whole-program bytes accessed
+    collective_bytes: float      # summed collective operand bytes
+    chips: int
+    per_device: bool             # cost_analysis numbers are per device
+
+    @property
+    def compute_s(self) -> float:
+        div = 1 if self.per_device else self.chips
+        return self.flops / div / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        div = 1 if self.per_device else self.chips
+        return self.hbm_bytes / div / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        # HLO text is per-partition under SPMD: bytes are per device
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def total_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def as_dict(self) -> Dict:
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": self.collective_bytes,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+        }
+
+
+def from_compiled(compiled, mesh_devices: int) -> Tuple[Roofline,
+                                                        CollectiveStats]:
+    """Primary terms from the loop-aware analyzer (hlo_cost); XLA's own
+    cost_analysis (which counts while bodies once) is kept for reference
+    in the dry-run JSON."""
+    from . import hlo_cost
+    cost = hlo_cost.analyze(compiled.as_text())
+    colls = CollectiveStats(
+        counts={k: int(v) for k, v in cost.coll_counts.items()},
+        bytes_by_kind={k: int(v)
+                       for k, v in cost.coll_bytes_by_kind.items()})
+    rl = Roofline(flops=cost.flops, hbm_bytes=cost.bytes,
+                  collective_bytes=cost.coll_bytes,
+                  chips=mesh_devices, per_device=True)
+    return rl, colls
+
+
+def xla_cost_reference(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0))}
+
+
+def model_flops(n_params: int, tokens: int, active_params: int = 0,
+                training: bool = True) -> float:
+    """MODEL_FLOPS = 6*N*D (training) or 2*N*D (inference); MoE uses
+    active params."""
+    n = active_params or n_params
+    mult = 6 if training else 2
+    return mult * n * tokens

@@ -1,0 +1,177 @@
+"""Fault-tolerant checkpointing (no orbax in this container).
+
+Format: one zstd-compressed msgpack file per save containing the flattened
+param/opt trees (host-gathered, logical global arrays) + metadata (step,
+mesh shape, config id). Writes are atomic (tmp + rename); restore scans
+for the newest *valid* checkpoint, skipping corrupted/partial files —
+together with the stateless-seeded data pipeline this gives
+checkpoint/restart with elastic re-meshing (restore re-shards onto
+whatever mesh the relaunch built).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import re
+import struct
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import zstandard
+
+PyTree = Any
+
+_MAGIC = b"RPCK1"
+
+
+def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def _pack_array(a: np.ndarray) -> Dict:
+    if a.dtype == jnp.bfloat16:  # numpy serializes ml_dtypes as void
+        return {"dtype": "bfloat16", "shape": list(a.shape),
+                "data": a.view(np.uint16).tobytes()}
+    return {"dtype": a.dtype.str, "shape": list(a.shape),
+            "data": a.tobytes()}
+
+
+def _unpack_array(d: Dict) -> np.ndarray:
+    if d["dtype"] == "bfloat16":
+        return np.frombuffer(d["data"], dtype=np.uint16).reshape(
+            d["shape"]).view(jnp.bfloat16)
+    return np.frombuffer(d["data"], dtype=np.dtype(d["dtype"])).reshape(
+        d["shape"])
+
+
+def save(ckpt_dir: str, step: int, trees: Dict[str, PyTree],
+         meta: Optional[Dict] = None) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    payload = {
+        "meta": {**(meta or {}), "step": int(step)},
+        "trees": {name: {k: _pack_array(v)
+                         for k, v in _flatten(tree).items()}
+                  for name, tree in trees.items()},
+    }
+    raw = msgpack.packb(payload, use_bin_type=True)
+    comp = zstandard.ZstdCompressor(level=3).compress(raw)
+    blob = _MAGIC + struct.pack("<Q", len(comp)) + comp
+    path = os.path.join(ckpt_dir, f"ckpt_{step:08d}.rpck")
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(blob)
+        f.flush()
+        os.fsync(f.fileno())
+    os.rename(tmp, path)  # atomic publish
+    return path
+
+
+def _load_file(path: str) -> Dict:
+    with open(path, "rb") as f:
+        blob = f.read()
+    if not blob.startswith(_MAGIC):
+        raise ValueError("bad magic")
+    (n,) = struct.unpack("<Q", blob[5:13])
+    comp = blob[13:13 + n]
+    if len(comp) != n:
+        raise ValueError("truncated checkpoint")
+    raw = zstandard.ZstdDecompressor().decompress(comp)
+    return msgpack.unpackb(raw, raw=False)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for fn in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"ckpt_(\d+)\.rpck", fn)
+        if m:
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, templates: Dict[str, PyTree],
+            shardings: Optional[Dict[str, PyTree]] = None
+            ) -> Optional[Tuple[int, Dict[str, PyTree], Dict]]:
+    """Restore the newest VALID checkpoint, re-sharding each leaf with the
+    provided shardings (elastic re-mesh). Corrupted files are skipped."""
+    if not os.path.isdir(ckpt_dir):
+        return None
+    files = sorted(
+        (fn for fn in os.listdir(ckpt_dir)
+         if re.fullmatch(r"ckpt_\d+\.rpck", fn)), reverse=True)
+    for fn in files:
+        try:
+            payload = _load_file(os.path.join(ckpt_dir, fn))
+        except Exception:
+            continue  # partial/corrupt — fall back to an older one
+        out = {}
+        ok = True
+        for name, template in templates.items():
+            if name not in payload["trees"]:
+                ok = False
+                break
+            flat = payload["trees"][name]
+            leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
+            new_leaves = []
+            for path, leaf in leaves:
+                key = "/".join(_path_str(p) for p in path)
+                if key not in flat:
+                    ok = False
+                    break
+                arr = _unpack_array(flat[key])
+                if tuple(arr.shape) != tuple(leaf.shape):
+                    ok = False
+                    break
+                sh = None
+                if shardings and name in shardings:
+                    sh = _lookup_path(shardings[name], path)
+                if sh is not None:
+                    new_leaves.append(jax.device_put(arr, sh))
+                else:
+                    new_leaves.append(jnp.asarray(arr))
+            if not ok:
+                break
+            out[name] = jax.tree_util.tree_unflatten(
+                jax.tree_util.tree_structure(template), new_leaves)
+        if ok:
+            return payload["meta"]["step"], out, payload["meta"]
+    return None
+
+
+def _lookup_path(tree, path):
+    node = tree
+    try:
+        for p in path:
+            if hasattr(p, "key"):
+                node = node[p.key]
+            elif hasattr(p, "idx"):
+                node = node[p.idx]
+        return node
+    except (KeyError, IndexError, TypeError):
+        return None
+
+
+def prune(ckpt_dir: str, keep: int = 3) -> None:
+    if not os.path.isdir(ckpt_dir):
+        return
+    files = sorted(
+        (fn for fn in os.listdir(ckpt_dir)
+         if re.fullmatch(r"ckpt_\d+\.rpck", fn)))
+    for fn in files[:-keep]:
+        os.remove(os.path.join(ckpt_dir, fn))

@@ -1,0 +1,161 @@
+"""Fault-tolerant training loop.
+
+Features (DESIGN.md Section 7): jitted sharded train step, gradient
+accumulation, checkpoint/auto-resume (atomic, newest-valid), elastic
+re-mesh on restore, per-step straggler deadline with skip-and-log, and
+a failure-injection hook used by the tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import DataConfig, SyntheticStream
+from repro.launch import steps as steps_lib
+from repro.launch.sharding import (batch_specs, opt_specs, param_specs,
+                                   to_shardings)
+from repro.models import model_zoo
+from repro.models.common import ModelConfig
+from repro.train import checkpoint as ckpt_lib
+from repro.train.optimizer import OptimizerConfig, init_opt_state
+
+log = logging.getLogger("repro.trainer")
+PyTree = Any
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    keep_ckpts: int = 3
+    log_every: int = 10
+    step_deadline_s: Optional[float] = None   # straggler mitigation
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, mesh,
+                 opt_cfg: Optional[OptimizerConfig] = None,
+                 tcfg: Optional[TrainerConfig] = None,
+                 dcfg: Optional[DataConfig] = None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.opt_cfg = opt_cfg or OptimizerConfig()
+        self.tcfg = tcfg or TrainerConfig()
+        self.dcfg = dcfg or DataConfig()
+        self.stream = SyntheticStream(cfg, self.dcfg)
+        self.step = 0
+        self.metrics_history: list = []
+        self._build()
+
+    # -- setup ---------------------------------------------------------------
+
+    def _build(self):
+        cfg, mesh = self.cfg, self.mesh
+        pshapes = model_zoo.param_shapes(cfg)
+        self.pspecs = param_specs(pshapes, mesh)
+        self.pshard = to_shardings(self.pspecs, mesh)
+        oshapes = jax.eval_shape(init_opt_state, pshapes)
+        ospecs = {"mu": opt_specs(self.pspecs, pshapes, mesh),
+                  "nu": opt_specs(self.pspecs, pshapes, mesh),
+                  "step": jax.sharding.PartitionSpec()}
+        self.oshard = to_shardings(ospecs, mesh)
+        bspecs = batch_specs(cfg, self.dcfg.batch, mesh, "train")
+        self.bshard = to_shardings(bspecs, mesh)
+
+        step_fn = steps_lib.make_train_step(cfg, self.opt_cfg)
+        self.train_step = jax.jit(
+            step_fn,
+            in_shardings=(self.pshard, self.oshard, self.bshard),
+            out_shardings=(self.pshard, self.oshard, None),
+            donate_argnums=(0, 1))
+
+    def init_state(self):
+        with self.mesh:
+            params = jax.jit(
+                lambda k: model_zoo.init_params(self.cfg, k),
+                out_shardings=self.pshard)(
+                    jax.random.PRNGKey(self.tcfg.seed))
+            opt_state = jax.jit(init_opt_state,
+                                out_shardings=self.oshard)(params)
+        return params, opt_state
+
+    # -- checkpointing / elastic restore -------------------------------------
+
+    def maybe_restore(self):
+        if not self.tcfg.ckpt_dir:
+            return None
+        pshapes = model_zoo.param_shapes(self.cfg)
+        oshapes = jax.eval_shape(init_opt_state, pshapes)
+        res = ckpt_lib.restore(
+            self.tcfg.ckpt_dir,
+            {"params": pshapes, "opt": oshapes},
+            {"params": self.pshard, "opt": self.oshard})
+        if res is None:
+            return None
+        step, trees, meta = res
+        self.step = step
+        log.info("restored step %d (saved on mesh %s, restored on %s)",
+                 step, meta.get("mesh"), tuple(self.mesh.shape.values()))
+        return trees["params"], trees["opt"]
+
+    def save(self, params, opt_state):
+        if not self.tcfg.ckpt_dir:
+            return
+        ckpt_lib.save(self.tcfg.ckpt_dir, self.step,
+                      {"params": params, "opt": opt_state},
+                      meta={"mesh": list(self.mesh.shape.values()),
+                            "arch": self.cfg.arch_id})
+        ckpt_lib.prune(self.tcfg.ckpt_dir, self.tcfg.keep_ckpts)
+
+    # -- loop -----------------------------------------------------------------
+
+    def _device_batch(self, batch_np: Dict[str, np.ndarray]):
+        return {k: jax.device_put(v, self.bshard[k])
+                for k, v in batch_np.items()}
+
+    def run(self, fail_at: Optional[int] = None) -> Dict[str, float]:
+        """Train; ``fail_at`` raises a simulated failure at that step
+        (tests restart the trainer and verify resume)."""
+        restored = self.maybe_restore()
+        if restored is not None:
+            params, opt_state = restored
+        else:
+            params, opt_state = self.init_state()
+
+        last = None
+        while self.step < self.tcfg.steps:
+            if fail_at is not None and self.step == fail_at:
+                raise RuntimeError(f"injected failure at step {self.step}")
+            t0 = time.time()
+            batch = self._device_batch(self.stream.batch_at(self.step))
+            with self.mesh:
+                params, opt_state, metrics = self.train_step(
+                    params, opt_state, batch)
+            if self.tcfg.step_deadline_s is not None:
+                jax.block_until_ready(metrics["loss"])
+                dt = time.time() - t0
+                if dt > self.tcfg.step_deadline_s:
+                    log.warning("straggler: step %d took %.2fs "
+                                "(deadline %.2fs)", self.step, dt,
+                                self.tcfg.step_deadline_s)
+            self.step += 1
+            if self.step % self.tcfg.log_every == 0 or \
+                    self.step == self.tcfg.steps:
+                last = {k: float(v) for k, v in metrics.items()}
+                self.metrics_history.append({"step": self.step, **last})
+                log.info("step %d: %s", self.step, last)
+            if self.tcfg.ckpt_dir and \
+                    self.step % self.tcfg.ckpt_every == 0:
+                self.save(params, opt_state)
+        if self.tcfg.ckpt_dir:
+            self.save(params, opt_state)
+        self._final = (params, opt_state)
+        return last or {}

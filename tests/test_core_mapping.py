@@ -1,0 +1,100 @@
+"""Unit tests: workloads, architectures, mapping representation."""
+import random
+
+import pytest
+
+from repro.core import (DIMS, LayerSpec, dram_pim, get_network,
+                        heuristic_mapping, random_mapping, reram_pim)
+from repro.core.mapping import divisors
+
+
+def small_arch():
+    return dram_pim(channels_per_layer=2, banks_per_channel=2,
+                    columns_per_bank=16)
+
+
+def small_layer():
+    return LayerSpec("l", K=8, C=4, P=12, Q=12, R=3, S=3, pad=1)
+
+
+def test_networks_shapes():
+    r18 = get_network("resnet18")
+    assert len(r18) == 20
+    assert r18[0].C == 3 and r18[0].stride == 2
+    assert len(get_network("vgg16")) == 13
+    r50 = get_network("resnet50")
+    assert len(r50) == 49
+    # chain consistency: consumer C == producer K for conv chains
+    for net in ("vgg16",):
+        layers = get_network(net)
+        for a, b in zip(layers, layers[1:]):
+            assert b.C == a.K
+
+
+def test_layer_derived_quantities():
+    l = small_layer()
+    assert l.macs == 8 * 4 * 12 * 12 * 9
+    assert l.input_shape == (4, 14, 14)
+    assert l.output_size() == 12 * 12 * 8
+    assert l.overall_size() == 12 * 12 * 4 * 8
+
+
+def test_divisors():
+    assert divisors(12) == (1, 2, 3, 4, 6, 12)
+    assert divisors(1) == (1,)
+    assert divisors(7) == (1, 7)
+
+
+def test_heuristic_mapping_valid():
+    m = heuristic_mapping(small_layer(), small_arch())
+    m.validate()
+    assert m.n_banks <= 4
+    assert m.n_columns_used <= 16
+    # full factorization -> macs conserved
+    assert m.macs_per_step() * m.n_steps * m.n_banks == small_layer().macs
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_random_mapping_valid(seed):
+    rng = random.Random(seed)
+    layer = small_layer()
+    arch = small_arch()
+    m = random_mapping(layer, arch, rng, max_steps=4096)
+    m.validate()
+    assert m.n_steps <= 4096
+    assert m.macs_per_step() * m.n_steps * m.n_banks == layer.macs
+
+
+def test_time_strides_mixed_radix():
+    m = heuristic_mapping(small_layer(), small_arch())
+    # strides are a proper mixed radix: stride[i] = prod sizes inner to i
+    sizes = [lp.size for lp in m.time_loops]
+    strides = m.time_strides
+    acc = 1
+    for sz, st in zip(reversed(sizes), reversed(strides)):
+        assert st == acc
+        acc *= sz
+
+
+def test_arch_presets():
+    d = dram_pim()
+    assert d.n_target_instances == 16
+    assert d.columns_per_target == 8192
+    assert d.op_latency("add") == 196.0
+    assert d.op_latency("mul") == 980.0
+    r = reram_pim()
+    assert r.op_latency("add") == 442.0
+    # AAP fallback model when ops not pinned
+    bare = dram_pim()
+    object.__setattr__(bare.levels[-1], "pim_ops", None)
+    assert bare.op_latency("add") == (4 * 16 + 1) * bare.timing.t_aap
+
+
+def test_reduction_dims_never_spatial_above_target():
+    rng = random.Random(0)
+    arch = small_arch()
+    for s in range(20):
+        m = random_mapping(small_layer(), arch, random.Random(s), 4096)
+        for li, lp in m.nest:
+            if lp.spatial and lp.dim in ("C", "R", "S"):
+                assert li == arch.target_index

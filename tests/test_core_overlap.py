@@ -1,0 +1,114 @@
+"""Overlap analysis: analytical == exhaustive (paper C2), scheduling,
+transformation (C3)."""
+import random
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Edge, IdentityMap, LayerSpec, analyze, dram_pim,
+                        heuristic_mapping, overlapped_end, random_mapping,
+                        ready_steps_analytical, ready_steps_exhaustive,
+                        schedule_with_ready, transform_schedule)
+
+
+def small_arch(cols=8):
+    return dram_pim(channels_per_layer=2, banks_per_channel=2,
+                    columns_per_bank=cols)
+
+
+def pair(seed, P=6, Q=6, C1=2, K1=4, K2=4, R=3):
+    rng = random.Random(seed)
+    lp = LayerSpec("p", K=K1, C=C1, P=P, Q=Q, R=R, S=R, pad=R // 2)
+    lc = LayerSpec("c", K=K2, C=K1, P=P, Q=Q, R=R, S=R, pad=R // 2)
+    arch = small_arch(4)
+    mp = random_mapping(lp, arch, rng, max_steps=256)
+    mc = random_mapping(lc, arch, rng, max_steps=256)
+    return mp, mc
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_ready_analytical_equals_exhaustive(seed):
+    mp, mc = pair(seed)
+    sa, ra = ready_steps_analytical(mp, mc)
+    se, re = ready_steps_exhaustive(mp, mc)
+    assert np.array_equal(ra, re)
+    assert np.array_equal(sa[~ra], se[~ra])
+
+
+@given(seed=st.integers(0, 10 ** 6))
+@settings(max_examples=15, deadline=None)
+def test_property_ready_steps(seed):
+    rng = random.Random(seed)
+    mp, mc = pair(seed, P=rng.choice([4, 6]), Q=4,
+                  K1=rng.choice([2, 4]), K2=2, R=rng.choice([1, 3]))
+    sa, ra = ready_steps_analytical(mp, mc)
+    se, re = ready_steps_exhaustive(mp, mc)
+    assert np.array_equal(sa[~ra], se[~re])
+
+
+def test_stride2_and_padding_edges():
+    """Strided consumer + padding: edge spaces may be ready at t=0."""
+    lp = LayerSpec("p", K=4, C=2, P=8, Q=8, R=3, S=3, pad=1)
+    lc = LayerSpec("c", K=2, C=4, P=4, Q=4, R=3, S=3, stride=2, pad=1)
+    arch = small_arch(4)
+    rng = random.Random(7)
+    mp = random_mapping(lp, arch, rng, 256)
+    mc = random_mapping(lc, arch, rng, 256)
+    sa, ra = ready_steps_analytical(mp, mc)
+    se, re = ready_steps_exhaustive(mp, mc)
+    assert np.array_equal(sa[~ra], se[~re])
+
+
+def test_schedule_with_ready_recurrence():
+    """Closed form == explicit recurrence."""
+    rng = np.random.RandomState(0)
+    ready = rng.uniform(0, 100, size=(3, 17))
+    L = 7.0
+    fin = schedule_with_ready(ready, L)
+    for b in range(3):
+        end = 0.0
+        for t in range(17):
+            end = max(end, ready[b, t]) + L
+            assert fin[b, t] == pytest.approx(end)
+
+
+def test_overlap_improves_or_equals_sequential():
+    mp, mc = pair(3)
+    pp, pc = analyze(mp), analyze(mc)
+    fin_step = (np.arange(mp.n_steps) + 1.0) * pp.step_ns
+    step, r0 = ready_steps_analytical(mp, mc)
+    ready = np.where(r0, 0.0, fin_step[step] + pp.tile_move_ns)
+    end_overlap = overlapped_end(ready, pc.step_ns)
+    end_seq = pp.compute_ns + pc.compute_ns
+    assert end_overlap <= end_seq + pp.tile_move_ns + 1e-6
+
+
+def test_transform_never_worse_than_plain_overlap():
+    """Round-robin re-allocation by ready time is at least as good as the
+    original allocation when relocation is free, and valid otherwise."""
+    mp, mc = pair(5)
+    pp, pc = analyze(mp), analyze(mc)
+    fin_step = (np.arange(mp.n_steps) + 1.0) * pp.step_ns
+    step, r0 = ready_steps_analytical(mp, mc)
+    ready = np.where(r0, 0.0, fin_step[step])
+    tr = transform_schedule(ready, pc.step_ns, tile_move_ns=0.0)
+    assert tr.end_ns <= overlapped_end(ready, pc.step_ns) + 1e-6
+    assert 0.0 <= tr.moved_frac <= 1.0
+    # finish array covers every original space exactly once
+    assert tr.finish_ns.shape == ready.shape
+    assert np.all(tr.finish_ns > 0)
+
+
+def test_transform_respects_ready_times():
+    ready = np.array([[0.0, 50.0, 10.0, 90.0]])
+    tr = transform_schedule(ready, step_ns=5.0)
+    # each space finishes at least ready + one step after its ready time
+    assert np.all(tr.finish_ns >= ready + 5.0 - 1e-9)
+
+
+def test_transform_sorted_ready_balances_banks():
+    """n equal-ready spaces over b banks finish in ceil(n/b) steps."""
+    ready = np.zeros((2, 8))  # 16 spaces, all ready at 0
+    tr = transform_schedule(ready, step_ns=1.0)
+    assert tr.end_ns == pytest.approx(8.0)

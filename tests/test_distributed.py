@@ -1,0 +1,123 @@
+"""Distributed correctness on an 8-device host mesh (subprocess sets
+XLA_FLAGS before jax import via conftest-free isolation)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r'''
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P, NamedSharding
+
+# ---- sharded train step == single-device train step ----
+from repro.configs import get_config
+from repro.models import model_zoo
+from repro.launch.mesh import make_host_mesh
+from repro.launch.sharding import param_specs, opt_specs, to_shardings, batch_specs
+from repro.launch import steps as steps_lib
+from repro.train.optimizer import init_opt_state
+from repro.models.inputs import make_train_batch
+
+cfg = get_config("olmo_1b", smoke=True)
+batch = make_train_batch(cfg, 8, 32, seed=3)
+params = model_zoo.init_params(cfg, jax.random.PRNGKey(0))
+opt = init_opt_state(params)
+step = steps_lib.make_train_step(cfg)
+
+# single device
+p1, o1, m1 = jax.jit(step)(params, opt, batch)
+
+# 4x2 mesh
+mesh = make_host_mesh(data=4, model=2)
+pspecs = param_specs(params, mesh)
+oshard = to_shardings({"mu": opt_specs(pspecs, params, mesh),
+                       "nu": opt_specs(pspecs, params, mesh),
+                       "step": P()}, mesh)
+pshard = to_shardings(pspecs, mesh)
+bshard = to_shardings(batch_specs(cfg, 8, mesh, "train"), mesh)
+with mesh:
+    p2, o2, m2 = jax.jit(step, in_shardings=(pshard, oshard, bshard),
+                         out_shardings=(pshard, oshard, None))(params, opt, batch)
+assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-3, (m1["loss"], m2["loss"])
+for a, b in zip(jax.tree_util.tree_leaves(p1), jax.tree_util.tree_leaves(p2)):
+    np.testing.assert_allclose(np.asarray(a, np.float32), np.asarray(b, np.float32),
+                               rtol=2e-3, atol=2e-3)
+print("TRAIN_OK")
+
+# ---- pipeline forward == sequential reference ----
+from repro.pipeline.overlap_pipeline import pipeline_forward, sequential_reference, overlap_schedule
+mesh2 = jax.make_mesh((4,), ("stage",))
+def stage_fn(p, x):
+    return jnp.tanh(x @ p["w"])
+k = jax.random.PRNGKey(1)
+sp = {"w": jax.random.normal(k, (4, 16, 16)) * 0.5}
+x = jax.random.normal(jax.random.PRNGKey(2), (6, 3, 16))
+y = pipeline_forward(stage_fn, sp, x, mesh2, axis="stage")
+yref = sequential_reference(stage_fn, sp, x)
+np.testing.assert_allclose(np.asarray(y), np.asarray(yref), rtol=1e-5, atol=1e-5)
+# with a transformation-derived emission order
+order = overlap_schedule(np.array([5.0, 1.0, 3.0, 0.0, 4.0, 2.0]))
+y2 = pipeline_forward(stage_fn, sp, x, mesh2, axis="stage", order=order)
+np.testing.assert_allclose(np.asarray(y2), np.asarray(yref), rtol=1e-5, atol=1e-5)
+print("PIPELINE_OK")
+
+# ---- decode parity: sharded decode == unsharded decode ----
+from repro.launch.sharding import cache_specs
+cfg2 = get_config("granite_8b", smoke=True)
+params2 = model_zoo.init_params(cfg2, jax.random.PRNGKey(5))
+cache = model_zoo.init_cache(cfg2, 8, 64)
+toks = jnp.arange(8, dtype=jnp.int32) % cfg2.vocab
+dstep = steps_lib.make_decode_step(cfg2)
+l1, c1 = jax.jit(dstep)(params2, cache, toks)
+cspecs = cache_specs(cfg2, 8, mesh, cache)
+with mesh:
+    l2, c2 = jax.jit(dstep,
+        in_shardings=(to_shardings(param_specs(params2, mesh), mesh),
+                      to_shardings(cspecs, mesh),
+                      NamedSharding(mesh, batch_specs(cfg2, 8, mesh, "decode"))))(
+        params2, cache, toks)
+# bf16 reassociation across shards: compare loosely + same argmax
+np.testing.assert_allclose(np.asarray(l1, np.float32), np.asarray(l2, np.float32),
+                           rtol=5e-2, atol=5e-2)
+assert (np.argmax(np.asarray(l1, np.float32), -1)
+        == np.argmax(np.asarray(l2, np.float32), -1)).all()
+print("DECODE_OK")
+
+# ---- elastic re-mesh: checkpoint on a 4x2 mesh, restore onto 2x4 ----
+import tempfile
+from repro.train import checkpoint as ckpt_lib
+from repro.train.optimizer import init_opt_state as _init_opt
+with tempfile.TemporaryDirectory() as td:
+    opt0 = _init_opt(params)
+    ckpt_lib.save(td, 5, {"params": params, "opt": opt0},
+                  meta={"mesh": [4, 2]})
+    mesh_b = make_host_mesh(data=2, model=4)
+    pspecs_b = param_specs(params, mesh_b)
+    pshard_b = to_shardings(pspecs_b, mesh_b)
+    oshard_b = to_shardings({"mu": opt_specs(pspecs_b, params, mesh_b),
+                             "nu": opt_specs(pspecs_b, params, mesh_b),
+                             "step": P()}, mesh_b)
+    res = ckpt_lib.restore(td, {"params": jax.eval_shape(lambda: params),
+                                "opt": jax.eval_shape(lambda: opt0)},
+                           {"params": pshard_b, "opt": oshard_b})
+    assert res is not None and res[0] == 5
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(res[1]["params"])):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+print("ELASTIC_OK")
+'''
+
+
+def test_distributed_parity():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    r = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=900,
+                       cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert r.returncode == 0, r.stderr[-4000:]
+    for tag in ("TRAIN_OK", "PIPELINE_OK", "DECODE_OK", "ELASTIC_OK"):
+        assert tag in r.stdout, (tag, r.stdout, r.stderr[-2000:])

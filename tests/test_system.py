@@ -1,0 +1,65 @@
+"""End-to-end behaviour tests for the Fast-OverlaPIM system."""
+import numpy as np
+import pytest
+
+from repro.core import (SearchConfig, describe, dram_pim, evaluate_chain,
+                        optimize_network, reram_pim)
+
+
+@pytest.fixture(scope="module")
+def arch():
+    # reduced column count keeps layers small enough for fast CI
+    return dram_pim(channels_per_layer=2, banks_per_channel=4,
+                    columns_per_bank=1024)
+
+
+def run(net, arch, mode, strategy="forward", n=10, seed=0):
+    desc = describe(net)
+    cfg = SearchConfig(n_candidates=n, seed=seed, max_steps=2048,
+                       mode=mode, strategy=strategy)
+    return optimize_network(desc.layers, desc.edges, arch, cfg)
+
+
+def test_resnet18_transform_beats_original(arch):
+    ro = run("resnet18", arch, "original")
+    rt = run("resnet18", arch, "transform")
+    assert rt.total_ns < ro.total_ns  # the paper's headline direction
+    assert len(rt.layers) == 20
+
+
+def test_vgg16_modes_ordering(arch):
+    ro = run("vgg16", arch, "original")
+    rv = run("vgg16", arch, "overlap")
+    rt = run("vgg16", arch, "transform")
+    assert rt.total_ns <= rv.total_ns * 1.02
+    assert rv.total_ns <= ro.total_ns * 1.02
+
+
+def test_original_overlap_evaluation(arch):
+    """'Best Original Overlap': Timeloop-best mappings re-scored with
+    overlap never get slower (Fig 4 motivation)."""
+    desc = describe("resnet18")
+    ro = run("resnet18", arch, "original")
+    maps = [l.mapping for l in ro.layers]
+    boo = evaluate_chain(maps, desc.edges, "overlap")
+    assert boo.total_ns <= ro.total_ns + 1e-6
+
+
+def test_bert_encoder_end_to_end(arch):
+    rt = run("bert_encoder", arch, "transform")
+    ro = run("bert_encoder", arch, "original")
+    assert rt.total_ns <= ro.total_ns * 1.02
+
+
+def test_reram_end_to_end():
+    arch = reram_pim(tiles_per_layer=2, blocks_per_tile=4,
+                     columns_per_block=256)
+    rt = run("resnet18", arch, "transform", n=6)
+    ro = run("resnet18", arch, "original", n=6)
+    assert rt.total_ns <= ro.total_ns * 1.02
+
+
+def test_per_layer_latencies_positive(arch):
+    rt = run("vgg16", arch, "transform", n=6)
+    assert all(l.latency_ns > 0 for l in rt.layers)
+    assert all(np.isfinite(l.end_ns) for l in rt.layers)
