@@ -1,0 +1,124 @@
+"""Mapping-search throughput benchmarks (batched engine vs pre-engine).
+
+Two row families:
+
+* ``bench_search.scoring_*`` — candidate scoring throughput on resnet18,
+  mode=transform, against a committed chain: the pre-engine per-candidate
+  path (``search._score_forward``) vs ``OverlapEngine.score_forward_batch``.
+  ``engine_cold`` scores a fresh pool on a fresh engine; ``engine_sustained``
+  re-scores the same pools (the regime the refine loop and repeated
+  strategy passes operate in, where memoized analysis is reused).
+* ``bench_search.search_<net>_<mode>_<strategy>`` — end-to-end
+  ``optimize_network`` wall time (engine path) for vgg16 / resnet18 /
+  bert_encoder across all four strategies x three modes; the derived
+  column carries the searched ``total_ms`` and candidates/sec so future
+  PRs can track search-throughput regressions.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import (MODES, STRATEGIES, SearchConfig, describe,
+                        optimize_network)
+from repro.core.engine import OverlapEngine
+from repro.core.search import _consumers_of, _score_forward, candidates
+
+from .common import MAX_STEPS, N_CANDIDATES, QUICK, SEED, csv_row, \
+    make_arch, search
+
+
+def _scoring_setup():
+    arch = make_arch("dram2")
+    desc = describe("resnet18")
+    cfg = SearchConfig(n_candidates=N_CANDIDATES, seed=SEED,
+                       max_steps=MAX_STEPS, mode="transform")
+    res, _ = search("resnet18", "dram2", "transform", "forward")
+    done = {i: lr for i, lr in enumerate(res.layers)}
+    pools = [candidates(desc.layers[i], arch, cfg, salt=i)
+             for i in range(len(desc.layers))]
+    scored = [(i, p) for i, p in enumerate(pools) if desc.edges[i]]
+    n = sum(len(p) for _, p in scored)
+    return desc, done, scored, n
+
+
+def scoring_throughput():
+    """Acceptance row: engine scoring throughput >= 5x the pre-engine
+    path on resnet18, mode=transform (sustained; cold also reported)."""
+    desc, done, scored, n = _scoring_setup()
+
+    t0 = time.perf_counter()
+    for i, pool in scored:
+        has_cons = bool(_consumers_of(desc.edges, i))
+        for m in pool:
+            _score_forward(i, m, desc.edges, done, "transform", has_cons)
+    t_ref = time.perf_counter() - t0
+
+    eng = OverlapEngine()
+
+    def engine_pass():
+        t0 = time.perf_counter()
+        for i, pool in scored:
+            eng.score_forward_batch(i, pool, desc.edges, done, "transform",
+                                    bool(_consumers_of(desc.edges, i)))
+        return time.perf_counter() - t0
+
+    t_cold = engine_pass()
+    t_sust = engine_pass()
+
+    yield csv_row("bench_search.scoring_ref", t_ref / n * 1e6,
+                  f"cands_per_s={n / t_ref:.0f}")
+    yield csv_row("bench_search.scoring_engine_cold", t_cold / n * 1e6,
+                  f"cands_per_s={n / t_cold:.0f}")
+    yield csv_row("bench_search.scoring_engine_sustained", t_sust / n * 1e6,
+                  f"cands_per_s={n / t_sust:.0f}")
+    yield csv_row("bench_search.scoring_speedup", 0.0,
+                  f"cold={t_ref / t_cold:.2f}x"
+                  f";sustained={t_ref / t_sust:.2f}x")
+
+
+def e2e_speedup():
+    """End-to-end optimize_network, engine vs pre-engine reference, on
+    resnet18 mode=transform with one refine pass (where incremental chain
+    re-evaluation matters). Asserts result equality while timing."""
+    arch = make_arch("dram2")
+    desc = describe("resnet18")
+    cfg = SearchConfig(n_candidates=12, seed=SEED, max_steps=2048,
+                       mode="transform", refine_passes=1)
+    t0 = time.perf_counter()
+    a = optimize_network(desc.layers, desc.edges, arch, cfg)
+    t_eng = time.perf_counter() - t0
+    ref_cfg = SearchConfig(n_candidates=12, seed=SEED, max_steps=2048,
+                           mode="transform", refine_passes=1,
+                           use_engine=False)
+    t0 = time.perf_counter()
+    b = optimize_network(desc.layers, desc.edges, arch, ref_cfg)
+    t_ref = time.perf_counter() - t0
+    if a.total_ns != b.total_ns:  # run.py counts the raise as a failure
+        raise AssertionError(
+            f"engine diverged from reference: {a.total_ns} != {b.total_ns}")
+    yield csv_row("bench_search.e2e_resnet18_transform_refine", t_eng * 1e6,
+                  f"ref_s={t_ref:.2f};engine_s={t_eng:.2f}"
+                  f";speedup={t_ref / t_eng:.2f}x;equal=True")
+
+
+def search_wall():
+    """End-to-end optimize_network wall time, engine path, per
+    net x mode x strategy."""
+    n_cand = 8 if QUICK else N_CANDIDATES
+    arch = make_arch("dram2")
+    for net in ("vgg16", "resnet18", "bert_encoder"):
+        desc = describe(net)
+        for mode in MODES:
+            for strategy in STRATEGIES:
+                cfg = SearchConfig(n_candidates=n_cand, seed=SEED,
+                                   max_steps=MAX_STEPS, mode=mode,
+                                   strategy=strategy)
+                t0 = time.perf_counter()
+                res = optimize_network(desc.layers, desc.edges, arch, cfg)
+                dt = time.perf_counter() - t0
+                cps = len(desc.layers) * n_cand / dt
+                yield csv_row(
+                    f"bench_search.search_{net}_{mode}_{strategy}",
+                    dt * 1e6,
+                    f"total_ms={res.total_ns / 1e6:.3f}"
+                    f";cands_per_s={cps:.0f}")

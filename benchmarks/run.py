@@ -5,9 +5,12 @@ import time
 
 
 def main() -> None:
-    from . import paper_figs, bench_kernels, roofline_report
+    from . import paper_figs, bench_kernels, bench_search, roofline_report
 
     benches = [
+        bench_search.scoring_throughput,
+        bench_search.e2e_speedup,
+        bench_search.search_wall,
         paper_figs.fig4_motivation,
         paper_figs.fig10_overall,
         paper_figs.fig11_vs_overlapim,

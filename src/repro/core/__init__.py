@@ -1,15 +1,17 @@
 """Fast-OverlaPIM core: the paper's mapping-optimization framework."""
 from .arch import ArchSpec, HBMTiming, Level, dram_pim, reram_pim, tpu_spatial
 from .dataspace import (DataSpaces, generate_analytical, generate_exhaustive,
-                        locate_finish, locate_finish_exhaustive)
+                        locate_finish, locate_finish_exhaustive, rect_bounds)
+from .engine import OverlapEngine, optimize_network_engine
 from .interface import NetworkDesc, chain_edges, describe, optimize
 from .mapping import Loop, Mapping, divisors, heuristic_mapping, \
     random_mapping
 from .overlap import (CoordMap, Edge, HeadFoldMap, HeadUnfoldMap,
-                      IdentityMap, WeightMap, overlapped_end,
+                      IdentityMap, WeightMap, consumer_tiles,
+                      max_step_in_rect, overlapped_end,
                       ready_steps_analytical, ready_steps_exhaustive,
-                      schedule_with_ready)
-from .perf_model import LayerPerf, analyze, step_latency_ns
+                      schedule_with_ready, stream_tail_fraction)
+from .perf_model import LayerPerf, PerfCache, analyze, step_latency_ns
 from .search import (MODES, STRATEGIES, LayerResult, NetworkResult,
                      SearchConfig, evaluate_chain, optimize_network)
 from .transform import TransformResult, transform_schedule

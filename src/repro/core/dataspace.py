@@ -81,6 +81,41 @@ def generate_analytical(mapping: Mapping,
     return DataSpaces(mapping=mapping, offsets=offsets, extent=extent)
 
 
+def rect_bounds(mapping: Mapping, dims=DIMS):
+    """Lower / upper (exclusive) corners of every (bank, step) rectangle:
+    ``(lo, hi)`` dicts of (n_banks, n_steps) arrays. This is the
+    consumer-tile view shared by overlap analysis and the batched engine
+    (which flattens and stacks these across candidate mappings)."""
+    ds = generate_analytical(mapping, dims)
+    lo = {d: ds.offsets[d] for d in dims}
+    hi = {d: ds.offsets[d] + ds.extent[d] for d in dims}
+    return lo, hi
+
+
+def rect_bounds_separable(mapping: Mapping, dims=DIMS):
+    """Factored form of ``rect_bounds``: per dim ``d`` the lower corner is
+    ``bank_part[d][b] + step_part[d][t]`` (spatial loops index only the
+    bank axis, temporal loops only the step axis — Eq (1)/(2) is a sum of
+    independent digit contributions). O(n_banks + n_steps) instead of
+    O(n_banks * n_steps); the batched engine dedups interval combos from
+    these parts instead of materializing the full grid. ``extent`` is the
+    mapping-constant rectangle size per dim."""
+    nb, nt = mapping.n_banks, mapping.n_steps
+    steps = np.arange(nt, dtype=np.int64)
+    banks = np.arange(nb, dtype=np.int64)
+    bank_part = {d: np.zeros(nb, dtype=np.int64) for d in dims}
+    step_part = {d: np.zeros(nt, dtype=np.int64) for d in dims}
+    for lp, blk, tstride, bstride in mapping.rect_loops:
+        if lp.dim not in bank_part:
+            continue
+        if lp.spatial:
+            bank_part[lp.dim] += ((banks // bstride) % lp.size) * blk
+        else:
+            step_part[lp.dim] += ((steps // tstride) % lp.size) * blk
+    extent = {d: mapping.tile_extent[d] for d in dims}
+    return bank_part, step_part, extent
+
+
 def generate_exhaustive(mapping: Mapping, dims=DIMS) -> DataSpaces:
     """Recursive enumeration of the nest (Timeloop-style reference)."""
     nb, nt = mapping.n_banks, mapping.n_steps

@@ -1,0 +1,602 @@
+"""Batched, memoizing overlap-analysis engine for the mapping search.
+
+``optimize_network`` scores K candidate mappings per layer against committed
+neighbors. The per-candidate reference path (``core.search`` /
+``core.overlap``) recomputes ``analyze()``, ``consumer_tiles()``,
+``stream_tail_fraction()`` and the ``max_step_in_rect`` digit scan from
+scratch for every (candidate, edge) pair, and the refine pass re-evaluates
+the whole chain per trial. The engine removes that redundancy without
+changing a single produced number (DESIGN.md Section 6):
+
+1. **Memoization** — ``analyze()`` (via ``PerfCache``), consumer tile
+   rectangles, tail fractions, clipped producer-space projections,
+   ``(step, ready0)`` ready matrices and whole candidate scores are cached
+   on ``Mapping.cache_key`` (interned layer+blocks token). Ready matrices
+   depend only on the two mappings and the coordinate map — never on
+   schedule times — so search, commit and refine all reuse one analysis.
+2. **Batched + deduplicated ready steps** — the tile rectangles of all K
+   candidates for a layer are flattened and concatenated along a leading
+   candidate axis; the mixed-radix digit scan then runs once per
+   *distinct* interval per dim (``max_step_in_rect_dedup`` — the step
+   maximum is separable across dims) and gathers back. ``IdentityMap``
+   edges use the stronger separable path (``_ready_steps_identity``):
+   tile corners factor into bank + step parts, so the scan touches only
+   distinct (bank value, step pair) combos.
+3. **Radix transform ordering** — single-edge ready matrices are ordered
+   by producer finish-time rank, handing ``transform_schedule`` a
+   precomputed stable integer argsort instead of a float mergesort.
+4. **Incremental chain re-evaluation** — a refine trial that changes layer
+   ``i`` only recomputes ``i`` and its transitive consumers, reusing the
+   committed ``LayerResult`` objects of unaffected layers (pure functions
+   of the mappings, so reuse is bit-exact).
+
+Equivalence contract: every engine path yields bit-identical scores,
+ready/step matrices, chosen mappings and ``total_ns`` to the reference
+path. Enforced by differential tests (``tests/test_core_engine.py``).
+An engine instance assumes a single ``ArchSpec`` object (one search run);
+caches are flushed if a mapping under a different arch object appears.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .arch import ArchSpec
+from .dataspace import rect_bounds, rect_bounds_separable
+from .mapping import Mapping
+from .overlap import (Edge, IdentityMap, CoordMap, digit_scan,
+                      overlapped_end, rect_loop_groups, schedule_with_ready,
+                      stream_tail_fraction)
+from .perf_model import LayerPerf, PerfCache
+from .search import (LayerResult, NetworkResult, SearchConfig, _consumers_of,
+                     _visit_order, candidates)
+from .transform import transform_schedule
+from .workload import LayerSpec, OUTPUT_DIMS
+
+
+def _unique_inverse(codes: np.ndarray, bound: int):
+    """``np.unique(codes, return_inverse=True)`` via a dense lookup table
+    when the code range is small (two O(n) passes instead of an O(n log n)
+    sort). ``codes`` must lie in ``[0, bound)``."""
+    if bound <= (1 << 20):
+        mask = np.zeros(bound, dtype=bool)
+        mask[codes] = True
+        uniq = np.flatnonzero(mask)
+        lut = np.empty(bound, dtype=np.int64)
+        lut[uniq] = np.arange(uniq.size)
+        return uniq, lut[codes]
+    return np.unique(codes, return_inverse=True)
+
+
+def max_step_in_rect_dedup(m_p: Mapping, plo, phi) -> np.ndarray:
+    """``overlap.max_step_in_rect`` with interval deduplication.
+
+    The step maximum is separable: ``T = const + sum_d best_d(lo_d, hi_d)``
+    where ``best_d`` depends only on that dim's interval. Candidate tile
+    grids repeat a handful of distinct intervals per dim (#offsets x
+    #extents, typically tens), so the digit scan runs on ``np.unique``
+    interval codes and gathers back — bit-identical results at a fraction
+    of the arithmetic. This is what makes stacking K candidates profitable
+    (DESIGN.md Section 6)."""
+    per_dim, const = rect_loop_groups(m_p)
+    shape = np.broadcast(*[plo[d] for d in OUTPUT_DIMS]).shape
+    total = np.full(shape, float(const))
+    for d, loops in per_dim.items():
+        lo = np.ascontiguousarray(
+            np.broadcast_to(plo[d], shape)).reshape(-1)
+        hi = np.ascontiguousarray(
+            np.broadcast_to(phi[d], shape)).reshape(-1) - 1  # inclusive
+        span = m_p.layer.dim(d) + 2
+        codes = lo * span + hi
+        uniq, inv = _unique_inverse(codes, span * span)
+        best = digit_scan(loops, uniq // span, uniq % span)
+        total = total + best[inv].reshape(shape)
+    return total.astype(np.int64)
+
+
+class OverlapEngine:
+    """Caches + batched kernels shared across one ``optimize_network`` run."""
+
+    def __init__(self):
+        self._perf = PerfCache()
+        self._tiles: Dict = {}   # mapping key -> (lo, hi) rect dicts
+        self._tsep: Dict = {}    # mapping key -> separable rect parts
+        self._tail: Dict = {}    # mapping key -> stream tail fraction
+        self._proj: Dict = {}    # (consumer key, cmap key, producer layer)
+        self._sepproj: Dict = {} # same key -> separable combo decomposition
+        self._ready: Dict = {}   # (producer key, consumer key, cmap key)
+        self._ranks: Dict = {}   # id(LayerResult) -> finish-step ranks
+        self._score: Dict = {}   # scoring-context key -> pinned score
+        self._arch: Optional[ArchSpec] = None
+
+    # -- memoized primitives -------------------------------------------------
+
+    def _check_arch(self, m: Mapping) -> None:
+        if self._arch is None:
+            self._arch = m.arch
+        elif m.arch is not self._arch:
+            # new search context: content keys are only unique per arch
+            self._tiles.clear()
+            self._tsep.clear()
+            self._tail.clear()
+            self._proj.clear()
+            self._sepproj.clear()
+            self._ready.clear()
+            self._ranks.clear()
+            self._score.clear()
+            self._arch = m.arch
+
+    def perf(self, m: Mapping) -> LayerPerf:
+        return self._perf.analyze(m)
+
+    def tiles(self, m: Mapping):
+        self._check_arch(m)
+        key = m.cache_key
+        hit = self._tiles.get(key)
+        if hit is None:
+            hit = self._tiles[key] = rect_bounds(m)
+        return hit
+
+    def tail(self, m: Mapping) -> float:
+        self._check_arch(m)
+        key = m.cache_key
+        hit = self._tail.get(key)
+        if hit is None:
+            hit = self._tail[key] = stream_tail_fraction(m)
+        return hit
+
+    def projection(self, m_c: Mapping, cmap: CoordMap, p_layer: LayerSpec):
+        """Clipped producer-output rectangle of every consumer tile. Depends
+        on the consumer mapping and the producer *layer* only, so backward
+        scoring reuses it across all producer candidates."""
+        self._check_arch(m_c)
+        key = (m_c.cache_key, cmap.key(), p_layer)
+        hit = self._proj.get(key)
+        if hit is None:
+            lo, hi = self.tiles(m_c)
+            plo, phi, ready0 = cmap.to_producer(p_layer, m_c.layer, lo, hi)
+            plo = {d: np.clip(plo[d], 0, p_layer.dim(d) - 1)
+                   for d in OUTPUT_DIMS}
+            phi = {d: np.clip(phi[d], 1, p_layer.dim(d))
+                   for d in OUTPUT_DIMS}
+            hit = self._proj[key] = (plo, phi, ready0)
+        return hit
+
+    def tiles_sep(self, m: Mapping):
+        self._check_arch(m)
+        key = m.cache_key
+        hit = self._tsep.get(key)
+        if hit is None:
+            hit = self._tsep[key] = rect_bounds_separable(m)
+        return hit
+
+    # -- ready-step analysis -------------------------------------------------
+
+    def ready_steps(self, m_p: Mapping, m_c: Mapping,
+                    cmap: Optional[CoordMap] = None):
+        """Memoized ``ready_steps_analytical`` (identical results)."""
+        self._check_arch(m_p)
+        cmap = cmap or IdentityMap()
+        key = (m_p.cache_key, m_c.cache_key, cmap.key())
+        hit = self._ready.get(key)
+        if hit is None:
+            if type(cmap) is IdentityMap:
+                hit = self._ready_steps_identity(m_p, m_c, cmap)
+            else:
+                plo, phi, ready0 = self.projection(m_c, cmap, m_p.layer)
+                hit = (max_step_in_rect_dedup(m_p, plo, phi), ready0)
+            self._ready[key] = hit
+        return hit
+
+    def _sep_decomp(self, m_c: Mapping, cmap: IdentityMap,
+                    p_layer: LayerSpec):
+        """Separable decomposition of the identity projection, cached per
+        (consumer mapping, cmap, producer layer) — producer-mapping-free,
+        so backward scoring shares it across all producer candidates.
+
+        Tile corners factor into bank + step parts (``rect_bounds_separable``)
+        and the identity projection is affine per dim, so each dim's
+        producer interval is ``bank_val[b] + (step_lo, step_hi)[t]``.
+        Returns the ready-at-0 mask plus, per output dim, the deduplicated
+        (bank values, step pairs) combos and their inverse indices."""
+        key = (m_c.cache_key, cmap.key(), p_layer)
+        hit = self._sepproj.get(key)
+        if hit is not None:
+            return hit
+        bank, stepp, ext = self.tiles_sep(m_c)
+        cl = m_c.layer
+        st, pad, pool = cl.stride, cl.pad, cmap.pool
+        nb, nt = m_c.n_banks, m_c.n_steps
+
+        # interval parts per producer output dim (hi inclusive)
+        parts = {
+            "K": (bank["C"], stepp["C"], stepp["C"] + ext["C"] - 1),
+            "P": (st * pool * bank["P"] + pool * bank["R"],
+                  pool * (st * stepp["P"] - pad + stepp["R"]),
+                  pool * (st * (stepp["P"] + ext["P"] - 1) - pad
+                          + stepp["R"] + ext["R"] - 1) + pool - 1),
+            "Q": (st * pool * bank["Q"] + pool * bank["S"],
+                  pool * (st * stepp["Q"] - pad + stepp["S"]),
+                  pool * (st * (stepp["Q"] + ext["Q"] - 1) - pad
+                          + stepp["S"] + ext["S"] - 1) + pool - 1),
+        }
+        hb, htl, hth = parts["P"]
+        wb, wtl, wth = parts["Q"]
+        # ready-at-0 mask: exact IdentityMap.to_producer semantics; scalar
+        # bound precheck skips the grid when no tile can be fully padded
+        if (int(hb.min() + hth.min()) >= 0
+                and int(wb.min() + wth.min()) >= 0
+                and int(hb.max() + htl.max()) < p_layer.P
+                and int(wb.max() + wtl.max()) < p_layer.Q):
+            ready0 = np.zeros((nb, nt), dtype=bool)
+        else:
+            ready0 = ((hb[:, None] + hth[None, :] < 0)
+                      | (wb[:, None] + wth[None, :] < 0)
+                      | (hb[:, None] + htl[None, :] >= p_layer.P)
+                      | (wb[:, None] + wtl[None, :] >= p_layer.Q))
+
+        combos = {}
+        for d in OUTPUT_DIMS:
+            B, TL, TH = parts[d]
+            tl_min = int(TL.min())
+            th_min = int(TH.min())
+            W = int(TH.max()) - th_min + 1
+            codes = (TL - tl_min) * W + (TH - th_min)
+            bound = (int(TL.max()) - tl_min + 1) * W
+            u_t, inv_t = _unique_inverse(codes, bound)
+            tl_u = u_t // W + tl_min
+            th_u = u_t % W + th_min
+            u_b, inv_b = np.unique(B, return_inverse=True)
+            combos[d] = (u_b, inv_b, tl_u, th_u, inv_t)
+        hit = self._sepproj[key] = (ready0, combos)
+        return hit
+
+    def _ready_steps_identity(self, m_p: Mapping, m_c: Mapping,
+                              cmap: IdentityMap):
+        """Separable fast path for ``IdentityMap`` edges: the digit scan
+        runs once per distinct (bank value, step pair) combo — typically
+        tens — and an outer gather rebuilds the (nb, nt) grid.
+        Bit-identical to ``ready_steps_analytical`` (the same integer
+        pipeline runs per distinct element)."""
+        pl = m_p.layer
+        ready0, combos = self._sep_decomp(m_c, cmap, pl)
+        per_dim, const = rect_loop_groups(m_p)
+        nb, nt = m_c.n_banks, m_c.n_steps
+
+        total = np.full((nb, nt), float(const))
+        for d, loops in per_dim.items():
+            u_b, inv_b, tl_u, th_u, inv_t = combos[d]
+            dim = pl.dim(d)
+            lo_raw = u_b[:, None] + tl_u[None, :]
+            hi_raw = u_b[:, None] + th_u[None, :]
+            if d == "K":
+                plo_c, phi_c = lo_raw, hi_raw + 1
+            else:  # to_producer's pre-clamp for P/Q
+                plo_c = np.maximum(lo_raw, 0)
+                phi_c = np.minimum(hi_raw, dim - 1) + 1
+            lo_c = np.clip(plo_c, 0, dim - 1)
+            hi_c = np.clip(phi_c, 1, dim) - 1          # inclusive
+            best = digit_scan(loops, lo_c, hi_c)
+            total = total + best[inv_b[:, None], inv_t[None, :]]
+        return total.astype(np.int64), ready0
+
+    def ready_steps_batch(self, m_p: Mapping, cands: Sequence[Mapping],
+                          cmap: Optional[CoordMap] = None):
+        """``ready_steps`` for K candidate consumers of one layer against a
+        fixed producer in a single vectorized pass: per-candidate projected
+        rectangles are flattened, concatenated along the candidate axis and
+        digit-scanned once. Results (bit-identical to the per-candidate
+        scan) land in the ready cache and are returned per candidate.
+        ``IdentityMap`` edges use the stronger separable per-candidate path
+        instead (deduplication beats concatenation there)."""
+        self._check_arch(m_p)
+        cmap = cmap or IdentityMap()
+        if type(cmap) is IdentityMap:
+            return [self.ready_steps(m_p, m, cmap) for m in cands]
+        ck = cmap.key()
+        pk = m_p.cache_key
+        out: List = [None] * len(cands)
+        todo: Dict[Tuple, List[int]] = {}
+        for k, m in enumerate(cands):
+            key = (pk, m.cache_key, ck)
+            hit = self._ready.get(key)
+            if hit is not None:
+                out[k] = hit
+            else:
+                todo.setdefault(key, []).append(k)  # dedupes equal mappings
+        if todo:
+            keys = list(todo)
+            reps = [cands[todo[key][0]] for key in keys]
+            projs = [self.projection(m, cmap, m_p.layer) for m in reps]
+            cat_lo = {d: np.concatenate([p[0][d].reshape(-1) for p in projs])
+                      for d in OUTPUT_DIMS}
+            cat_hi = {d: np.concatenate([p[1][d].reshape(-1) for p in projs])
+                      for d in OUTPUT_DIMS}
+            step_cat = max_step_in_rect_dedup(m_p, cat_lo, cat_hi)
+            ofs = 0
+            for key, rep, (plo, phi, ready0) in zip(keys, reps, projs):
+                n = ready0.size
+                step = step_cat[ofs:ofs + n].reshape(ready0.shape)
+                ofs += n
+                self._ready[key] = (step, ready0)
+                for k in todo[key]:
+                    out[k] = (step, ready0)
+        return out
+
+    def _prod_ranks(self, prod: LayerResult):
+        """Per producer result: synchronous per-step finish times and their
+        dense ranks (ties share a rank). Ranks are integer sort keys whose
+        stable order equals the stable order of the float ready times."""
+        ent = self._ranks.get(id(prod))
+        if ent is None or ent[0] is not prod:
+            fin_step = prod.finish_ns.max(axis=0)
+            order = np.argsort(fin_step, kind="stable")
+            vals = fin_step[order]
+            ranks = np.empty(fin_step.size, dtype=np.int64)
+            ranks[order] = np.concatenate(
+                [[0], np.cumsum(vals[1:] > vals[:-1])])
+            ent = self._ranks[id(prod)] = (prod, fin_step, ranks)
+        return ent[1], ent[2]
+
+    def ready_matrix(self, mapping: Mapping, edges: Sequence[Edge],
+                     done: Dict[int, LayerResult]) -> np.ndarray:
+        """Engine twin of ``search._ready_matrix`` (same operation order)."""
+        nb, nt = mapping.n_banks, mapping.n_steps
+        ready = np.zeros((nb, nt), dtype=np.float64)
+        for e in edges:
+            prod = done[e.producer]
+            step, ready0 = self.ready_steps(prod.mapping, mapping, e.cmap)
+            fin_step, _ = self._prod_ranks(prod)
+            r = fin_step[step] + prod.perf.tile_move_ns
+            r = np.where(ready0, 0.0, r)
+            ready = np.maximum(ready, r)
+        return ready
+
+    def ready_matrix_order(self, mapping: Mapping, edges: Sequence[Edge],
+                           done: Dict[int, LayerResult]):
+        """``(ready, order)`` where ``order``, when not None, equals
+        ``np.argsort(ready.reshape(-1), kind='stable')``.
+
+        Single-edge case: ready values are ``fin_step[step] + tile_move``
+        (or 0 for always-ready spaces), so ranking producer steps once
+        yields integer sort keys and a radix argsort replaces the float
+        mergesort inside ``transform_schedule``. Multi-edge ready matrices
+        (max over edges) have no shared key space — callers fall back to
+        the float sort."""
+        if len(edges) != 1:
+            return self.ready_matrix(mapping, edges, done), None
+        e = edges[0]
+        prod = done[e.producer]
+        step, ready0 = self.ready_steps(prod.mapping, mapping, e.cmap)
+        fin_step, ranks = self._prod_ranks(prod)
+        ready = np.where(ready0, 0.0,
+                         fin_step[step] + prod.perf.tile_move_ns)
+        # finish times are positive, so rank 0 is reserved for ready-at-0
+        key = np.where(ready0, 0, ranks[step] + 1)
+        order = np.argsort(key.reshape(-1), kind="stable")
+        return ready, order
+
+    # -- chain evaluation ----------------------------------------------------
+
+    def layer_result(self, i: int, m: Mapping, edges: Sequence[Sequence[Edge]],
+                     done: Dict[int, LayerResult], mode: str) -> LayerResult:
+        """Per-layer result with exactly ``evaluate_chain``'s semantics."""
+        perf = self.perf(m)
+        nb, nt = m.n_banks, m.n_steps
+        if mode == "original":
+            start = max((done[e.producer].end_ns for e in edges[i]),
+                        default=0.0)
+            t = np.arange(nt, dtype=np.float64)
+            fin = start + np.broadcast_to(
+                (t + 1) * perf.step_ns, (nb, nt)).copy()
+            end = start + perf.compute_ns + perf.output_move_ns
+            return LayerResult(m, perf, start, end, fin)
+        ready, order = self.ready_matrix_order(m, edges[i], done)
+        start = float(ready.min()) if ready.size else 0.0
+        if mode == "transform" and edges[i]:
+            tr = transform_schedule(ready, perf.step_ns, perf.tile_move_ns,
+                                    order=order)
+            return LayerResult(m, perf, start,
+                               tr.end_ns + perf.output_move_ns,
+                               tr.finish_ns, transformed=True,
+                               moved_frac=tr.moved_frac)
+        fin = schedule_with_ready(ready, perf.step_ns)
+        return LayerResult(m, perf, start,
+                           float(fin[:, -1].max()) + perf.output_move_ns,
+                           fin)
+
+    def evaluate_chain(self, mappings: Sequence[Mapping],
+                       edges: Sequence[Sequence[Edge]], mode: str,
+                       reuse: Optional[Tuple[Sequence[LayerResult],
+                                             Sequence[Mapping]]] = None
+                       ) -> NetworkResult:
+        """``evaluate_chain`` with optional incremental reuse.
+
+        ``reuse=(base_results, base_mappings)``: layers whose mapping is
+        unchanged AND whose (transitive) producers are all unchanged keep
+        their base ``LayerResult`` — bit-exact because results are pure
+        functions of the mapping chain prefix."""
+        n = len(mappings)
+        base = None
+        affected = set(range(n))
+        if reuse is not None:
+            base_res, base_maps = reuse
+            changed = {j for j in range(n)
+                       if mappings[j].cache_key != base_maps[j].cache_key}
+            affected = set()
+            for j in range(n):
+                if j in changed or any(e.producer in affected
+                                       for e in edges[j]):
+                    affected.add(j)
+            base = base_res
+        done: Dict[int, LayerResult] = {}
+        per_layer = []
+        for i, m in enumerate(mappings):
+            if base is not None and i not in affected:
+                done[i] = base[i]
+            else:
+                done[i] = self.layer_result(i, m, edges, done, mode)
+            per_layer.append(done[i].latency_ns)
+        total = max(r.end_ns for r in done.values()) if done else 0.0
+        return NetworkResult(layers=[done[i] for i in range(n)],
+                             total_ns=total, mode=mode,
+                             per_layer_ns=per_layer)
+
+    # -- candidate scoring ---------------------------------------------------
+
+    def score_forward_batch(self, i: int, cands: Sequence[Mapping],
+                            edges: Sequence[Sequence[Edge]],
+                            done: Dict[int, LayerResult], mode: str,
+                            has_consumer: bool = True) -> np.ndarray:
+        """Vector of ``search._score_forward`` values for all candidates;
+        ready steps for each edge are computed in one batched pass."""
+        if cands:
+            self._check_arch(cands[0])
+        if mode == "original":
+            base = max((done[e.producer].end_ns for e in edges[i]),
+                       default=0.0)
+            return np.array([base + self.perf(m).sequential_ns
+                             for m in cands])
+        if edges[i]:
+            for e in edges[i]:
+                self.ready_steps_batch(done[e.producer].mapping, cands,
+                                       e.cmap)
+        # score memo: a candidate's forward score is a pure function of
+        # (mode, candidate, committed producer results, has_consumer) —
+        # refine passes and repeated strategy sweeps re-score identical
+        # contexts, which the reference path recomputes from scratch
+        prods = tuple(done[e.producer] for e in edges[i])
+        pids = tuple(id(p) for p in prods)
+        out = np.empty(len(cands), dtype=np.float64)
+        for k, m in enumerate(cands):
+            skey = (mode, m.cache_key, has_consumer, pids)
+            hit = self._score.get(skey)
+            if hit is not None and all(a is b for a, b in zip(hit[0],
+                                                              prods)):
+                out[k] = hit[1]
+                continue
+            perf = self.perf(m)
+            tail = self.tail(m) if has_consumer else 0.0
+            penalty = tail * perf.compute_ns
+            if not edges[i]:
+                out[k] = perf.sequential_ns + penalty
+            else:
+                ready, order = self.ready_matrix_order(m, edges[i], done)
+                if mode == "transform":
+                    tr = transform_schedule(ready, perf.step_ns,
+                                            perf.tile_move_ns, order=order)
+                    out[k] = tr.end_ns + perf.output_move_ns + penalty
+                else:
+                    out[k] = overlapped_end(ready, perf.step_ns) \
+                        + perf.output_move_ns + penalty
+            self._score[skey] = (prods, out[k])
+        return out
+
+    def score_backward(self, i: int, m: Mapping,
+                       edges: Sequence[Sequence[Edge]],
+                       fixed: Dict[int, Mapping], mode: str) -> float:
+        """``search._score_backward`` with memoized analysis: the consumer
+        tile projection is shared across all producer candidates, so each
+        candidate only pays its own digit scan. The full score is memoized
+        on (mode, candidate, fixed consumer mappings) — a pure function."""
+        self._check_arch(m)
+        cons_key = tuple(sorted((j, fixed[j].cache_key)
+                                for j in _consumers_of(edges, i)
+                                if j in fixed))
+        skey = ("bw", mode, i, m.cache_key, cons_key)
+        hit = self._score.get(skey)
+        if hit is not None:
+            return hit[1]
+        perf = self.perf(m)
+        done = {i: LayerResult(
+            m, perf, 0.0, perf.sequential_ns,
+            np.broadcast_to((np.arange(m.n_steps) + 1.0) * perf.step_ns,
+                            (m.n_banks, m.n_steps)).copy())}
+        cons = [j for j in _consumers_of(edges, i) if j in fixed]
+        if mode == "original" or not cons:
+            self._score[skey] = (None, perf.sequential_ns)
+            return perf.sequential_ns
+        worst = 0.0
+        for j in cons:
+            mc = fixed[j]
+            pc = self.perf(mc)
+            es = [e for e in edges[j] if e.producer == i]
+            ready = self.ready_matrix(mc, es, done)
+            if mode == "transform":
+                worst = max(worst, transform_schedule(
+                    ready, pc.step_ns, pc.tile_move_ns).end_ns)
+            else:
+                worst = max(worst, overlapped_end(ready, pc.step_ns))
+        self._score[skey] = (None, worst)
+        return worst
+
+
+def optimize_network_engine(layers: Sequence[LayerSpec],
+                            edges: Sequence[Sequence[Edge]],
+                            arch: ArchSpec,
+                            cfg: SearchConfig,
+                            engine: Optional[OverlapEngine] = None
+                            ) -> NetworkResult:
+    """Engine-backed ``optimize_network``: identical algorithm, candidates
+    and tie-breaking as the reference path — same chosen mappings, same
+    ``total_ns`` — with batched scoring and incremental refinement."""
+    eng = engine or OverlapEngine()
+    n = len(layers)
+    order, backward_part = _visit_order(layers, cfg.strategy)
+
+    chosen: Dict[int, Mapping] = {}
+    done: Dict[int, LayerResult] = {}
+    for i in order:
+        cands = candidates(layers[i], arch, cfg, salt=i)
+        if i in backward_part:
+            scores = np.array([eng.score_backward(i, m, edges, chosen,
+                                                  cfg.mode) for m in cands])
+        else:
+            avail = all(e.producer in done for e in edges[i])
+            has_cons = bool(_consumers_of(edges, i))
+            if avail:
+                scores = eng.score_forward_batch(i, cands, edges, done,
+                                                 cfg.mode, has_cons)
+            else:
+                scores = np.array([eng.perf(m).sequential_ns
+                                   for m in cands])
+        # np.argmin == first minimum == min(cands, key=...) tie-breaking
+        chosen[i] = cands[int(np.argmin(scores))]
+        if all(e.producer in done for e in edges[i]):
+            done[i] = eng.layer_result(i, chosen[i], edges, done, cfg.mode)
+    cur_maps = [chosen[i] for i in range(n)]
+    result = eng.evaluate_chain(cur_maps, edges, cfg.mode)
+
+    # coordinate-descent refinement: trials differ from the current chain
+    # in one layer, so only that layer + transitive consumers re-evaluate
+    for _ in range(cfg.refine_passes if cfg.mode != "original" else 0):
+        improved = False
+        cur_res = result
+        for i in range(n):
+            rcfg = dataclasses.replace(
+                cfg, n_candidates=cfg.refine_candidates)
+            cands = candidates(layers[i], arch, rcfg, salt=i + 7919)
+            cands.append(chosen[i])
+            best_m, best_t = chosen[i], result.total_ns
+            for m in cands:
+                trial_maps = list(cur_maps)
+                trial_maps[i] = m
+                r = eng.evaluate_chain(trial_maps, edges, cfg.mode,
+                                       reuse=(cur_res.layers, cur_maps))
+                if r.total_ns < best_t - 1e-9:
+                    best_m, best_t = m, r.total_ns
+            if best_m is not chosen[i]:
+                chosen[i] = best_m
+                new_maps = [chosen[j] for j in range(n)]
+                cur_res = eng.evaluate_chain(
+                    new_maps, edges, cfg.mode,
+                    reuse=(cur_res.layers, cur_maps))
+                cur_maps = new_maps
+                improved = True
+        result = eng.evaluate_chain(cur_maps, edges, cfg.mode,
+                                    reuse=(cur_res.layers, cur_maps))
+        if not improved:
+            break
+    return result

@@ -37,6 +37,13 @@ class Loop:
         return f"{tag}({self.dim}:{self.size})"
 
 
+# process-global intern table: token -> unique per (layer, blocks) content.
+# Deliberately unbounded — tokens must never be reused (engine caches key on
+# them), and entries are tiny tuples bounded by the distinct mappings a
+# process ever explores.
+_CACHE_KEY_INTERN: Dict = {}
+
+
 @dataclasses.dataclass(frozen=True)
 class Mapping:
     layer: LayerSpec
@@ -194,6 +201,20 @@ class Mapping:
             else:
                 out.append((lp, cur[lp.dim], next(tstrides), 0))
         return out
+
+    @functools.cached_property
+    def cache_key(self) -> int:
+        """Content-based identity for memoization: an interned token for
+        (layer spec, loop blocks) — equal-content mappings share a token,
+        and later cache lookups hash a small int instead of the whole
+        nest. ``ArchSpec`` holds unhashable members (per-level op dicts) so
+        callers cache per-arch (see ``core.engine``); two mappings with
+        equal keys under the same arch are behaviourally identical."""
+        content = (self.layer, self.blocks)
+        token = _CACHE_KEY_INTERN.get(content)
+        if token is None:
+            token = _CACHE_KEY_INTERN[content] = len(_CACHE_KEY_INTERN)
+        return token
 
     def macs_per_step(self) -> int:
         e = self.tile_extent

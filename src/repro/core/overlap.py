@@ -25,7 +25,7 @@ from typing import Callable, Dict, Optional, Tuple
 
 import numpy as np
 
-from .dataspace import generate_analytical, locate_finish
+from .dataspace import generate_analytical, locate_finish, rect_bounds
 from .mapping import Mapping
 from .workload import LayerSpec, OUTPUT_DIMS
 
@@ -39,10 +39,17 @@ Rect = Dict[str, np.ndarray]  # dim -> lo / hi arrays
 class CoordMap:
     """Maps a consumer tile (lo/hi per dim, in the consumer's 7D coords) to
     a bounding rectangle in the producer's output space [K, P, Q], plus a
-    mask of spaces that are ready at t=0 (e.g. fully inside padding)."""
+    mask of spaces that are ready at t=0 (e.g. fully inside padding).
+    Coordinate conventions are specified in DESIGN.md Section 5.2."""
 
     def to_producer(self, producer: LayerSpec, consumer: LayerSpec,
                     lo: Rect, hi: Rect) -> Tuple[Rect, Rect, np.ndarray]:
+        raise NotImplementedError
+
+    def key(self) -> Tuple:
+        """Hashable content identity (cache key for the batched engine).
+        ``to_producer`` must be a pure function of this key and its
+        arguments."""
         raise NotImplementedError
 
 
@@ -55,6 +62,9 @@ class IdentityMap(CoordMap):
 
     def __init__(self, pool: int = 1):
         self.pool = pool
+
+    def key(self):
+        return ("identity", self.pool)
 
     def to_producer(self, producer, consumer, lo, hi):
         st, pad, pool = consumer.stride, consumer.pad, self.pool
@@ -77,10 +87,13 @@ class HeadFoldMap(CoordMap):
 
     Consumer input coord (c, row) needs producer output (P=row%seq,
     K=(row//seq)*hd + c). Bounding box is conservative when a tile spans a
-    head boundary (documented in DESIGN.md Section 5)."""
+    head boundary (documented in DESIGN.md Section 5.3)."""
 
     def __init__(self, seq: int, hd: int):
         self.seq, self.hd = seq, hd
+
+    def key(self):
+        return ("headfold", self.seq, self.hd)
 
     def to_producer(self, producer, consumer, lo, hi):
         seq, hd = self.seq, self.hd
@@ -104,6 +117,9 @@ class HeadUnfoldMap(CoordMap):
 
     def __init__(self, seq: int, hd: int):
         self.seq, self.hd = seq, hd
+
+    def key(self):
+        return ("headunfold", self.seq, self.hd)
 
     def to_producer(self, producer, consumer, lo, hi):
         seq, hd = self.seq, self.hd
@@ -129,6 +145,9 @@ class WeightMap(CoordMap):
     def __init__(self, seq: int, hd: int, kind: str):
         assert kind in ("qk_weight", "av_weight")
         self.seq, self.hd, self.kind = seq, hd, kind
+
+    def key(self):
+        return ("weight", self.kind, self.seq, self.hd)
 
     def to_producer(self, producer, consumer, lo, hi):
         seq, hd = self.seq, self.hd
@@ -165,28 +184,18 @@ class Edge:
 # ---------------------------------------------------------------------------
 
 def consumer_tiles(m_c: Mapping) -> Tuple[Rect, Rect]:
-    ds = generate_analytical(m_c)
-    lo = {d: ds.offsets[d] for d in ds.offsets}
-    hi = {d: ds.offsets[d] + ds.extent[d] for d in ds.offsets}
-    return lo, hi
+    return rect_bounds(m_c)
 
 
 # ---------------------------------------------------------------------------
 # Ready-step computation: analytical (the paper) vs exhaustive (OverlaPIM).
 # ---------------------------------------------------------------------------
 
-def max_step_in_rect(m_p: Mapping, plo: Rect, phi: Rect) -> np.ndarray:
-    """Latest producer time step touching the rectangle [plo, phi).
-
-    The step index is separable across dims: T = sum_d T_d(coord_d) with
-    T_d a weighted mixed-radix digit sum (temporal loops weigh their
-    Eq (1) stride G, spatial loops weigh 0). Per dim we take the exact
-    maximum of the weighted digit value over the coordinate interval via a
-    closed-form digit scan (families: x==hi, x==lo, follow-hi-then-drop,
-    follow-lo-then-raise — each with a free max suffix). Reduction dims
-    contribute their last iteration (output complete only after the whole
-    reduction). Vectorized over arbitrary interval arrays."""
-    # group rect loops per dim
+def rect_loop_groups(m_p: Mapping):
+    """Group ``rect_loops`` per output dim as ``(size, block, weight)``
+    triples, plus the constant contribution of reduction/batch dims (taken
+    at their last iteration). Shared preamble of ``max_step_in_rect`` and
+    the engine's deduplicated scans."""
     per_dim: Dict[str, list] = {}
     const = 0
     for lp, blk, tstride, bstride in m_p.rect_loops:
@@ -195,44 +204,72 @@ def max_step_in_rect(m_p: Mapping, plo: Rect, phi: Rect) -> np.ndarray:
             per_dim.setdefault(lp.dim, []).append((lp.size, blk, w))
         else:  # reduction / batch dims: last iteration
             const += w * (lp.size - 1)
+    return per_dim, const
 
+
+def digit_scan(loops, lo: np.ndarray, hi: np.ndarray) -> np.ndarray:
+    """Exact maximum of one dim's weighted mixed-radix digit sum over the
+    coordinate interval [lo, hi] (inclusive), via a closed-form digit scan
+    (families: x==hi, x==lo, follow-hi-then-drop, follow-lo-then-raise —
+    each with a free max suffix). This is the single canonical scan kernel:
+    ``max_step_in_rect`` runs it on full rect arrays, the engine on
+    deduplicated intervals."""
+    shape = lo.shape
+    m = len(loops)
+    if m == 1:
+        # single digit: lo <= hi implies digit(lo) <= digit(hi) (no wrap,
+        # the loop spans the whole dim) and families 3/4 never beat w*b
+        n1, blk, w1 = loops[0]
+        return float(w1) * ((hi // blk) % n1)
+    a = [(lo // blk) % n for (n, blk, w) in loops]
+    b = [(hi // blk) % n for (n, blk, w) in loops]
+    w = [float(wl) for (_, _, wl) in loops]
+    n = [nl for (nl, _, _) in loops]
+    # prefix weighted values (exclusive) + prefix digit equality
+    pre_hi = np.zeros(shape)
+    pre_lo = np.zeros(shape)
+    eq = np.ones(shape, dtype=bool)
+    # suffix free maxima (exclusive of position j)
+    suf = [np.zeros(shape) for _ in range(m + 1)]
+    for j in range(m - 1, -1, -1):
+        suf[j] = suf[j + 1] + w[j] * (n[j] - 1)
+    val_hi = np.zeros(shape)
+    val_lo = np.zeros(shape)
+    for j in range(m):
+        val_hi = val_hi + w[j] * b[j]
+        val_lo = val_lo + w[j] * a[j]
+    best = np.maximum(val_hi, val_lo)
+    for j in range(m):
+        # family 3: follow hi's digits, drop at j, free suffix
+        f3_ok = (b[j] >= 1) & (~eq | (b[j] - 1 > a[j]))
+        f3 = pre_hi + w[j] * (b[j] - 1) + suf[j + 1]
+        best = np.where(f3_ok, np.maximum(best, f3), best)
+        # family 4: follow lo's digits, raise at j, free suffix
+        f4_ok = (~eq) & (a[j] + 1 <= n[j] - 1)
+        f4 = pre_lo + w[j] * (n[j] - 1) + suf[j + 1]
+        best = np.where(f4_ok, np.maximum(best, f4), best)
+        pre_hi = pre_hi + w[j] * b[j]
+        pre_lo = pre_lo + w[j] * a[j]
+        eq = eq & (a[j] == b[j])
+    return best
+
+
+def max_step_in_rect(m_p: Mapping, plo: Rect, phi: Rect) -> np.ndarray:
+    """Latest producer time step touching the rectangle [plo, phi).
+
+    The step index is separable across dims: T = sum_d T_d(coord_d) with
+    T_d a weighted mixed-radix digit sum (temporal loops weigh their
+    Eq (1) stride G, spatial loops weigh 0); per dim ``digit_scan`` takes
+    the exact interval maximum. Reduction dims contribute their last
+    iteration (output complete only after the whole reduction). Vectorized
+    over arbitrary interval arrays."""
+    per_dim, const = rect_loop_groups(m_p)
     shape = np.broadcast(*[plo[d] for d in OUTPUT_DIMS]).shape
     total = np.full(shape, float(const))
     for d, loops in per_dim.items():
-        lo = plo[d]
-        hi = phi[d] - 1                     # inclusive
-        m = len(loops)
-        a = [ (lo // blk) % n for (n, blk, w) in loops ]
-        b = [ (hi // blk) % n for (n, blk, w) in loops ]
-        w = [ float(wl) for (_, _, wl) in loops ]
-        n = [ nl for (nl, _, _) in loops ]
-        # prefix weighted values (exclusive) + prefix digit equality
-        pre_hi = np.zeros(shape)
-        pre_lo = np.zeros(shape)
-        eq = np.ones(shape, dtype=bool)
-        # suffix free maxima (exclusive of position j)
-        suf = [np.zeros(shape) for _ in range(m + 1)]
-        for j in range(m - 1, -1, -1):
-            suf[j] = suf[j + 1] + w[j] * (n[j] - 1)
-        val_hi = np.zeros(shape)
-        val_lo = np.zeros(shape)
-        for j in range(m):
-            val_hi = val_hi + w[j] * b[j]
-            val_lo = val_lo + w[j] * a[j]
-        best = np.maximum(val_hi, val_lo)
-        for j in range(m):
-            # family 3: follow hi's digits, drop at j, free suffix
-            f3_ok = (b[j] >= 1) & (~eq | (b[j] - 1 > a[j]))
-            f3 = pre_hi + w[j] * (b[j] - 1) + suf[j + 1]
-            best = np.where(f3_ok, np.maximum(best, f3), best)
-            # family 4: follow lo's digits, raise at j, free suffix
-            f4_ok = (~eq) & (a[j] + 1 <= n[j] - 1)
-            f4 = pre_lo + w[j] * (n[j] - 1) + suf[j + 1]
-            best = np.where(f4_ok, np.maximum(best, f4), best)
-            pre_hi = pre_hi + w[j] * b[j]
-            pre_lo = pre_lo + w[j] * a[j]
-            eq = eq & (a[j] == b[j])
-        total = total + best
+        lo = np.broadcast_to(plo[d], shape)
+        hi = np.broadcast_to(phi[d], shape) - 1     # inclusive
+        total = total + digit_scan(loops, lo, hi)
     return total.astype(np.int64)
 
 

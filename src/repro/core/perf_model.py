@@ -109,3 +109,23 @@ def analyze(mapping: Mapping) -> LayerPerf:
         compute_ns=compute_ns, output_move_ns=output_move_ns,
         tile_move_ns=tile_move_ns,
         sequential_ns=compute_ns + output_move_ns, energy_pj=energy)
+
+
+class PerfCache:
+    """Memoizes ``analyze()`` on ``Mapping.cache_key`` (layer + blocks).
+
+    ``ArchSpec`` is not hashable (per-level op dicts), so entries pin the
+    arch instance and are invalidated when a mapping with the same content
+    key arrives under a different arch object. One instance per search run
+    (the batched engine owns one)."""
+
+    def __init__(self):
+        self._store: dict = {}
+
+    def analyze(self, mapping: Mapping) -> LayerPerf:
+        key = mapping.cache_key
+        hit = self._store.get(key)
+        if hit is None or hit[0] is not mapping.arch:
+            hit = (mapping.arch, analyze(mapping))
+            self._store[key] = hit
+        return hit[1]

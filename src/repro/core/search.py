@@ -45,6 +45,9 @@ class SearchConfig:
     # against both committed neighbors (0 = the paper's linear search)
     refine_passes: int = 0
     refine_candidates: int = 8
+    # batched/memoizing engine (core.engine); False = per-candidate
+    # reference path, kept as the differential-test oracle
+    use_engine: bool = True
 
     def __post_init__(self):
         assert self.mode in MODES, self.mode
@@ -234,6 +237,17 @@ def optimize_network(layers: Sequence[LayerSpec],
                      arch: ArchSpec,
                      cfg: Optional[SearchConfig] = None) -> NetworkResult:
     cfg = cfg or SearchConfig()
+    if cfg.use_engine:
+        from .engine import optimize_network_engine  # lazy: avoids cycle
+        return optimize_network_engine(layers, edges, arch, cfg)
+    return _optimize_network_reference(layers, edges, arch, cfg)
+
+
+def _optimize_network_reference(layers: Sequence[LayerSpec],
+                                edges: Sequence[Sequence[Edge]],
+                                arch: ArchSpec,
+                                cfg: SearchConfig) -> NetworkResult:
+    """Pre-engine per-candidate path — the differential-test oracle."""
     n = len(layers)
     order, backward_part = _visit_order(layers, cfg.strategy)
 

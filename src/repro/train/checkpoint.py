@@ -1,6 +1,8 @@
 """Fault-tolerant checkpointing (no orbax in this container).
 
-Format: one zstd-compressed msgpack file per save containing the flattened
+Format: one compressed msgpack file per save (zstd when ``zstandard`` is
+installed, stdlib zlib otherwise — the magic records which) containing the
+flattened
 param/opt trees (host-gathered, logical global arrays) + metadata (step,
 mesh shape, config id). Writes are atomic (tmp + rename); restore scans
 for the newest *valid* checkpoint, skipping corrupted/partial files —
@@ -16,15 +18,28 @@ import re
 import struct
 from typing import Any, Dict, Optional, Tuple
 
+import zlib
+
 import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:  # zstd when available; stdlib zlib otherwise (ISSUE 1: no hard dep)
+    import zstandard
+except ImportError:
+    zstandard = None
 
 PyTree = Any
 
-_MAGIC = b"RPCK1"
+_MAGIC = b"RPCK1"      # zstd-compressed payload
+_MAGIC_ZLIB = b"RPCK2"  # zlib-compressed payload (fallback codec)
+
+
+class MissingCodecError(RuntimeError):
+    """A checkpoint needs a codec this environment lacks. Distinct from
+    corruption: restore() must NOT silently skip such files (that would
+    roll training back to an older checkpoint)."""
 
 
 def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:
@@ -69,8 +84,11 @@ def save(ckpt_dir: str, step: int, trees: Dict[str, PyTree],
                   for name, tree in trees.items()},
     }
     raw = msgpack.packb(payload, use_bin_type=True)
-    comp = zstandard.ZstdCompressor(level=3).compress(raw)
-    blob = _MAGIC + struct.pack("<Q", len(comp)) + comp
+    if zstandard is not None:
+        magic, comp = _MAGIC, zstandard.ZstdCompressor(level=3).compress(raw)
+    else:
+        magic, comp = _MAGIC_ZLIB, zlib.compress(raw, 6)
+    blob = magic + struct.pack("<Q", len(comp)) + comp
     path = os.path.join(ckpt_dir, f"ckpt_{step:08d}.rpck")
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
@@ -84,13 +102,24 @@ def save(ckpt_dir: str, step: int, trees: Dict[str, PyTree],
 def _load_file(path: str) -> Dict:
     with open(path, "rb") as f:
         blob = f.read()
-    if not blob.startswith(_MAGIC):
+    if blob.startswith(_MAGIC):
+        codec = "zstd"
+    elif blob.startswith(_MAGIC_ZLIB):
+        codec = "zlib"
+    else:
         raise ValueError("bad magic")
     (n,) = struct.unpack("<Q", blob[5:13])
     comp = blob[13:13 + n]
     if len(comp) != n:
         raise ValueError("truncated checkpoint")
-    raw = zstandard.ZstdDecompressor().decompress(comp)
+    if codec == "zstd":
+        if zstandard is None:
+            raise MissingCodecError(
+                "checkpoint was written with zstd but zstandard is not "
+                "installed in this environment")
+        raw = zstandard.ZstdDecompressor().decompress(comp)
+    else:
+        raw = zlib.decompress(comp)
     return msgpack.unpackb(raw, raw=False)
 
 
@@ -118,6 +147,8 @@ def restore(ckpt_dir: str, templates: Dict[str, PyTree],
     for fn in files:
         try:
             payload = _load_file(os.path.join(ckpt_dir, fn))
+        except MissingCodecError:
+            raise  # not corruption — skipping would lose training progress
         except Exception:
             continue  # partial/corrupt — fall back to an older one
         out = {}

@@ -1,0 +1,56 @@
+"""Deterministic stand-ins for ``hypothesis`` decorators.
+
+The container may not ship ``hypothesis``; skipping the whole module would
+drop the C1/C2 analytical-vs-exhaustive oracle tests entirely. Instead the
+property tests import these shims as a fallback: ``@given`` becomes a
+``pytest.mark.parametrize`` over a fixed, seeded sample of the strategy
+space (same assertions, deterministic inputs). With ``hypothesis``
+installed the real decorators are used and these shims are never imported.
+"""
+import random
+
+import pytest
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+class _St:
+    @staticmethod
+    def integers(lo, hi):
+        return _Strategy(lambda rng: rng.randint(lo, hi))
+
+    @staticmethod
+    def sampled_from(options):
+        opts = list(options)
+        return _Strategy(lambda rng: rng.choice(opts))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+
+st = _St()
+
+
+def settings(max_examples=10, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strategies):
+    """Expand to a parametrize over ``max_examples`` seeded draws."""
+    def deco(fn):
+        n = getattr(fn, "_max_examples", 10)
+        rng = random.Random(0xFA57)
+        names = sorted(strategies)
+        cases = [tuple(strategies[k].draw(rng) for k in names)
+                 for _ in range(n)]
+        if len(names) == 1:
+            cases = [c[0] for c in cases]
+        return pytest.mark.parametrize(",".join(names), cases)(fn)
+    return deco

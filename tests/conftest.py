@@ -1,0 +1,3 @@
+def pytest_report_header(config):
+    return ("marker hint: run `-m 'not kernels and not slow'` for the fast "
+            "core loop; default runs everything (markers in pytest.ini)")

@@ -4,10 +4,16 @@ import random
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.core import (Edge, IdentityMap, LayerSpec, analyze, dram_pim,
-                        heuristic_mapping, overlapped_end, random_mapping,
+try:  # property tests prefer hypothesis; fall back to fixed seeded draws
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _prop_fallback import given, settings, st
+
+from repro.core import (Edge, HeadFoldMap, HeadUnfoldMap, IdentityMap,
+                        LayerSpec, WeightMap, analyze, chain_edges, describe,
+                        dram_pim, evaluate_chain, heuristic_mapping, matmul,
+                        overlapped_end, random_mapping,
                         ready_steps_analytical, ready_steps_exhaustive,
                         schedule_with_ready, transform_schedule)
 
@@ -112,3 +118,83 @@ def test_transform_sorted_ready_balances_banks():
     ready = np.zeros((2, 8))  # 16 spaces, all ready at 0
     tr = transform_schedule(ready, step_ns=1.0)
     assert tr.end_ns == pytest.approx(8.0)
+
+
+# ---------------------------------------------------------------------------
+# CoordMap coverage: analytical == exhaustive for the attention maps
+# (HeadFold / HeadUnfold / both WeightMap kinds), not just IdentityMap.
+# ---------------------------------------------------------------------------
+
+SEQ, HEADS, HD, DM = 8, 2, 4, 8
+
+
+def _attn_pair(kind, seed):
+    """(producer layer, consumer layer, cmap) for one attention edge."""
+    rng = random.Random(seed)
+    proj = matmul("proj", SEQ, DM, DM)
+    qk = matmul("qk", SEQ, HD, SEQ, batch=HEADS)
+    av = matmul("av", SEQ, SEQ, HD, batch=HEADS)
+    out = matmul("out", SEQ, DM, DM)
+    pairs = {
+        "headfold": (proj, qk, HeadFoldMap(SEQ, HD)),     # qk <- q_proj
+        "headunfold": (av, out, HeadUnfoldMap(SEQ, HD)),  # out <- av
+        "qk_weight": (proj, qk, WeightMap(SEQ, HD, "qk_weight")),
+        "av_weight": (proj, av, WeightMap(SEQ, HD, "av_weight")),
+    }
+    lp, lc, cmap = pairs[kind]
+    arch = small_arch(8)
+    mp = random_mapping(lp, arch, rng, 64)
+    mc = random_mapping(lc, arch, rng, 64)
+    return mp, mc, cmap
+
+
+@pytest.mark.parametrize("kind",
+                         ["headfold", "headunfold", "qk_weight",
+                          "av_weight"])
+@pytest.mark.parametrize("seed", range(4))
+def test_attention_cmaps_analytical_equals_exhaustive(kind, seed):
+    mp, mc, cmap = _attn_pair(kind, seed)
+    sa, ra = ready_steps_analytical(mp, mc, cmap)
+    se, re = ready_steps_exhaustive(mp, mc, cmap)
+    assert np.array_equal(ra, re)
+    assert np.array_equal(sa[~ra], se[~ra])
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_bert_network_edges_analytical_equals_exhaustive(seed):
+    """Every edge of the wired BERT encoder block, as built by
+    ``describe`` (covers the conservative head-boundary bounding boxes —
+    DESIGN.md Section 5.3)."""
+    desc = describe("bert_encoder", seq=SEQ, d_model=DM, heads=HEADS,
+                    d_ff=16)
+    arch = small_arch(8)
+    rng = random.Random(seed)
+    maps = [random_mapping(l, arch, rng, 64) for l in desc.layers]
+    for i, edges in enumerate(desc.edges):
+        for e in edges:
+            sa, ra = ready_steps_analytical(maps[e.producer], maps[i],
+                                            e.cmap)
+            se, re = ready_steps_exhaustive(maps[e.producer], maps[i],
+                                            e.cmap)
+            assert np.array_equal(ra, re), (i, e.producer)
+            assert np.array_equal(sa[~ra], se[~ra]), (i, e.producer)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_mode_ordering_on_fixed_chain(seed):
+    """transform <= overlap <= original total_ns for the same mappings on
+    a fixed seeded chain (Fig 4 / Fig 10 trend as an invariant)."""
+    net = [
+        LayerSpec("l0", K=8, C=4, P=8, Q=8, R=3, S=3, pad=1),
+        LayerSpec("l1", K=8, C=8, P=8, Q=8, R=3, S=3, pad=1),
+        LayerSpec("l2", K=16, C=8, P=4, Q=4, R=3, S=3, stride=2, pad=1),
+    ]
+    arch = dram_pim(channels_per_layer=2, banks_per_channel=2,
+                    columns_per_bank=64)
+    rng = random.Random(seed)
+    maps = [random_mapping(l, arch, rng, 512) for l in net]
+    edges = chain_edges(net)
+    t = {m: evaluate_chain(maps, edges, m).total_ns
+         for m in ("original", "overlap", "transform")}
+    assert t["transform"] <= t["overlap"] + 1e-6
+    assert t["overlap"] <= t["original"] + 1e-6

@@ -4,7 +4,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # property tests prefer hypothesis; fall back to fixed seeded draws
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _prop_fallback import given, settings, st
+
+pytestmark = pytest.mark.kernels  # JAX/Pallas compile-heavy (see pytest.ini)
 
 from repro.kernels.flash_attn import attention_ref, flash_attention_op
 from repro.kernels.fused_mlp import fused_mlp_op, fused_mlp_ref

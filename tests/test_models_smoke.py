@@ -5,6 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # per-arch forward/decode XLA compiles
+
 from repro.configs import ARCH_IDS, get_config
 from repro.models import model_zoo
 from repro.models.inputs import make_decode_tokens, make_train_batch

@@ -9,6 +9,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # trainer-loop / serve-engine XLA compiles
+
 from repro.configs import get_config
 from repro.data.synthetic import DataConfig, SyntheticStream
 from repro.models import model_zoo
@@ -90,6 +92,26 @@ def test_checkpoint_skips_corrupt_latest(tmp_path):
     res = ckpt.restore(str(tmp_path), {"params": jax.eval_shape(
         lambda: t)})
     assert res is not None and res[0] == 1  # fell back to older valid
+
+
+def test_checkpoint_missing_codec_raises(tmp_path):
+    """A checkpoint written with a codec this env lacks must raise loudly,
+    not be skipped as corrupt (silent skip would roll training back)."""
+    t = _tiny_tree()
+    ckpt.save(str(tmp_path), 3, {"params": t})
+    # forge a newer zstd-magic file; without zstandard installed restore
+    # must raise MissingCodecError instead of falling back to step 3
+    import struct
+    blob = ckpt._MAGIC + struct.pack("<Q", 4) + b"zzzz"
+    with open(str(tmp_path / "ckpt_00000009.rpck"), "wb") as f:
+        f.write(blob)
+    template = {"params": jax.eval_shape(lambda: t)}
+    if ckpt.zstandard is None:
+        with pytest.raises(ckpt.MissingCodecError):
+            ckpt.restore(str(tmp_path), template)
+    else:  # codec available: the forged file is plain corruption -> skip
+        res = ckpt.restore(str(tmp_path), template)
+        assert res is not None and res[0] == 3
 
 
 def test_checkpoint_prune(tmp_path):
