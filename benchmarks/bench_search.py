@@ -13,6 +13,9 @@ Two row families:
   bert_encoder across all four strategies x three modes; the derived
   column carries the searched ``total_ms`` and candidates/sec so future
   PRs can track search-throughput regressions.
+
+Every row is additionally mirrored into ``BENCH_search.json`` (see
+``benchmarks.record``) so the perf trajectory is machine-readable.
 """
 from __future__ import annotations
 
@@ -23,8 +26,17 @@ from repro.core import (MODES, STRATEGIES, SearchConfig, describe,
 from repro.core.engine import OverlapEngine
 from repro.core.search import _consumers_of, _score_forward, candidates
 
+from . import record
 from .common import MAX_STEPS, N_CANDIDATES, QUICK, SEED, csv_row, \
     make_arch, search
+
+
+def _emit(name: str, us_per_call: float, derived: str) -> str:
+    """CSV row that is also mirrored into BENCH_search.json, so the
+    perf trajectory of the search path is machine-readable across PRs."""
+    record.update_rows({name: {"us_per_call": round(us_per_call, 3),
+                               "derived": derived}})
+    return csv_row(name, us_per_call, derived)
 
 
 def _scoring_setup():
@@ -65,13 +77,13 @@ def scoring_throughput():
     t_cold = engine_pass()
     t_sust = engine_pass()
 
-    yield csv_row("bench_search.scoring_ref", t_ref / n * 1e6,
+    yield _emit("bench_search.scoring_ref", t_ref / n * 1e6,
                   f"cands_per_s={n / t_ref:.0f}")
-    yield csv_row("bench_search.scoring_engine_cold", t_cold / n * 1e6,
+    yield _emit("bench_search.scoring_engine_cold", t_cold / n * 1e6,
                   f"cands_per_s={n / t_cold:.0f}")
-    yield csv_row("bench_search.scoring_engine_sustained", t_sust / n * 1e6,
+    yield _emit("bench_search.scoring_engine_sustained", t_sust / n * 1e6,
                   f"cands_per_s={n / t_sust:.0f}")
-    yield csv_row("bench_search.scoring_speedup", 0.0,
+    yield _emit("bench_search.scoring_speedup", 0.0,
                   f"cold={t_ref / t_cold:.2f}x"
                   f";sustained={t_ref / t_sust:.2f}x")
 
@@ -96,7 +108,7 @@ def e2e_speedup():
     if a.total_ns != b.total_ns:  # run.py counts the raise as a failure
         raise AssertionError(
             f"engine diverged from reference: {a.total_ns} != {b.total_ns}")
-    yield csv_row("bench_search.e2e_resnet18_transform_refine", t_eng * 1e6,
+    yield _emit("bench_search.e2e_resnet18_transform_refine", t_eng * 1e6,
                   f"ref_s={t_ref:.2f};engine_s={t_eng:.2f}"
                   f";speedup={t_ref / t_eng:.2f}x;equal=True")
 
@@ -117,7 +129,7 @@ def search_wall():
                 res = optimize_network(desc.layers, desc.edges, arch, cfg)
                 dt = time.perf_counter() - t0
                 cps = len(desc.layers) * n_cand / dt
-                yield csv_row(
+                yield _emit(
                     f"bench_search.search_{net}_{mode}_{strategy}",
                     dt * 1e6,
                     f"total_ms={res.total_ns / 1e6:.3f}"

@@ -1,0 +1,66 @@
+"""Machine-readable benchmark journal (``BENCH_search.json``).
+
+The CSV stream stays the human-facing output; this module mirrors the
+perf-relevant rows into a committed JSON file so the throughput/latency
+trajectory is tracked across PRs. Writers merge: existing keys are
+overwritten, unrelated keys survive, so the bench suite and the ``dse``
+subcommand can update their own sections independently.
+
+Schema::
+
+    {"schema": 1,
+     "rows": {"<bench row name>": {"us_per_call": ..., "derived": ...}},
+     "dse": {"<family>/<network>/<mode>": {summary numbers}}}
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict
+
+BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_search.json")
+
+
+def _load(path: str = BENCH_JSON) -> Dict:
+    if os.path.exists(path):
+        try:
+            with open(path, "r", encoding="utf-8") as fh:
+                data = json.load(fh)
+            if isinstance(data, dict):
+                data.setdefault("schema", 1)
+                data.setdefault("rows", {})
+                data.setdefault("dse", {})
+                return data
+        except (json.JSONDecodeError, OSError):
+            pass
+    return {"schema": 1, "rows": {}, "dse": {}}
+
+
+def _dump(data: Dict, path: str = BENCH_JSON) -> None:
+    tmp = path + ".tmp"
+    with open(tmp, "w", encoding="utf-8") as fh:
+        json.dump(data, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    os.replace(tmp, path)
+
+
+def update_rows(rows: Dict[str, Dict], path: str = BENCH_JSON) -> None:
+    """Merge ``{name: {"us_per_call": ..., "derived": ...}}`` rows."""
+    data = _load(path)
+    data["rows"].update(rows)
+    _dump(data, path)
+
+
+def update_dse(key: str, summary: Dict, path: str = BENCH_JSON) -> None:
+    """Merge one DSE sweep summary under ``dse[key]``.
+
+    A fully journal-resumed sweep (``evaluated == 0``) must not clobber
+    the genuine search-cost numbers of the run that populated the
+    journal — the file tracks the perf trajectory across PRs, not
+    replay time."""
+    data = _load(path)
+    if summary.get("evaluated") == 0 and key in data["dse"]:
+        return
+    data["dse"][key] = summary
+    _dump(data, path)

@@ -1,11 +1,35 @@
-# One function per paper table/figure. Prints ``name,us_per_call,derived``
-# CSV. Set BENCH_FULL=1 for the full-budget (paper-scale) search runs.
+"""Benchmark driver.
+
+Two entry points::
+
+    python benchmarks/run.py [bench]      # paper-figure + perf CSV suite
+    python benchmarks/run.py dse [...]    # architecture DSE sweep
+
+Both also work as ``python -m benchmarks.run`` with ``PYTHONPATH=src``;
+run as a plain script the repo root and ``src/`` are bootstrapped onto
+``sys.path``. The ``bench`` suite prints ``name,us_per_call,derived`` CSV
+(set ``BENCH_FULL=1`` for paper-scale budgets); perf-relevant rows are
+mirrored into ``BENCH_search.json``. The ``dse`` subcommand co-searches
+PIM architectures x overlap mappings (``repro.dse``), prints the Pareto
+frontier and writes a resumable JSONL journal — re-running a finished
+sweep performs zero new mapping searches.
+"""
+import argparse
+import dataclasses
+import os
 import sys
 import time
 
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
-def main() -> None:
-    from . import paper_figs, bench_kernels, bench_search, roofline_report
+
+def bench_main() -> None:
+    # one function per paper table/figure
+    from benchmarks import (bench_kernels, bench_search, paper_figs,
+                            roofline_report)
 
     benches = [
         bench_search.scoring_throughput,
@@ -43,6 +67,109 @@ def main() -> None:
           flush=True)
     if failures:
         sys.exit(1)
+
+
+def _dse_parser() -> argparse.ArgumentParser:
+    from repro.dse import EXPLORERS, SPACES
+    from repro.core.search import MODES, STRATEGIES
+
+    p = argparse.ArgumentParser(
+        prog="run.py dse",
+        description="Co-search PIM architectures x overlap mappings.")
+    p.add_argument("--network", default="resnet18",
+                   help="network name, or 'all' for "
+                        "resnet18/vgg16/bert_encoder x all modes")
+    p.add_argument("--family", default="dram_pim", choices=sorted(SPACES))
+    p.add_argument("--mode", default="transform", choices=MODES)
+    p.add_argument("--strategy", default="forward", choices=STRATEGIES)
+    p.add_argument("--explorer", default="evolve", choices=EXPLORERS)
+    p.add_argument("--budget", type=int, default=64,
+                   help="design points to propose (journal hits included)")
+    p.add_argument("--seed", type=int, default=1)
+    p.add_argument("--candidates", type=int, default=8,
+                   help="mapping candidates per layer per point")
+    p.add_argument("--max-steps", type=int, default=2048)
+    p.add_argument("--workers", type=int, default=0,
+                   help="process-pool size (0 = serial, shared engine)")
+    p.add_argument("--journal", default=None,
+                   help="JSONL journal path (default: "
+                        "dse_runs/<family>_<network>_<mode>.jsonl)")
+    return p
+
+
+def dse_main(argv) -> None:
+    args = _dse_parser().parse_args(argv)
+    from benchmarks import record
+    from repro.dse import (DSEConfig, best_arch_table, frontier_table,
+                           run_dse, summarize, sweep_networks)
+
+    # one journal-naming scheme for both branches; a literal --journal
+    # path has no {placeholders} and formats to itself
+    journal_template = args.journal or os.path.join(
+        "dse_runs", args.family + "_{network}_{mode}.jsonl")
+
+    def sweep_summary(res) -> dict:
+        best = res.best_within_area() or res.baseline
+        return {
+            "explorer": res.config.explorer,
+            "budget": res.config.budget,
+            "evaluated": res.stats["evaluated"],
+            "from_journal": res.stats["from_journal"],
+            "frontier": res.stats["frontier"],
+            "wall_s": round(res.stats["wall_s"], 2),
+            "baseline_arch": res.baseline["arch_name"],
+            "baseline_total_ns": res.baseline["total_ns"],
+            "best_iso_area_arch": best["arch_name"],
+            "best_iso_area_total_ns": best["total_ns"],
+            "best_iso_area_point": best["point"],
+        }
+
+    base = DSEConfig(
+        family=args.family, mode=args.mode, strategy=args.strategy,
+        explorer=args.explorer, budget=args.budget, seed=args.seed,
+        n_candidates=args.candidates, max_steps=args.max_steps,
+        workers=args.workers)
+
+    if args.network == "all":
+        base = dataclasses.replace(base, journal_path=journal_template)
+        results = sweep_networks(base)
+        for (net, mode), res in sorted(results.items()):
+            print(f"== {net} / {mode} ==")
+            print(summarize(res))
+            print(frontier_table(res.frontier))
+            print()
+            record.update_dse(f"{args.family}/{net}/{mode}",
+                              sweep_summary(res))
+        print(best_arch_table(results))
+        return
+
+    cfg = dataclasses.replace(
+        base, network=args.network,
+        journal_path=journal_template.format(network=args.network,
+                                             mode=args.mode))
+    res = run_dse(cfg)
+    print(summarize(res))
+    print(frontier_table(res.frontier))
+    print(f"dse: journal={cfg.journal_path} entries={_journal_len(cfg)}")
+    record.update_dse(f"{args.family}/{args.network}/{args.mode}",
+                      sweep_summary(res))
+
+
+def _journal_len(cfg) -> int:
+    from repro.dse import RunJournal
+    return len(RunJournal(cfg.journal_path))
+
+
+def main() -> None:
+    argv = sys.argv[1:]
+    if argv and argv[0] == "dse":
+        dse_main(argv[1:])
+    elif not argv or argv[0] == "bench":
+        bench_main()
+    else:
+        print(f"unknown subcommand {argv[0]!r}; use 'bench' or 'dse'",
+              file=sys.stderr)
+        sys.exit(2)
 
 
 if __name__ == '__main__':

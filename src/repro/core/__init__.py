@@ -11,7 +11,8 @@ from .overlap import (CoordMap, Edge, HeadFoldMap, HeadUnfoldMap,
                       max_step_in_rect, overlapped_end,
                       ready_steps_analytical, ready_steps_exhaustive,
                       schedule_with_ready, stream_tail_fraction)
-from .perf_model import LayerPerf, PerfCache, analyze, step_latency_ns
+from .perf_model import (LayerPerf, PerfCache, analyze, arch_area_proxy,
+                         arch_power_proxy, step_latency_ns)
 from .search import (MODES, STRATEGIES, LayerResult, NetworkResult,
                      SearchConfig, evaluate_chain, optimize_network)
 from .transform import TransformResult, transform_schedule

@@ -12,6 +12,8 @@ latency via the performance model.
 from __future__ import annotations
 
 import dataclasses
+import functools
+import json
 import math
 from typing import Dict, Optional, Tuple
 
@@ -24,6 +26,23 @@ class Level:
     read_bw: Optional[float] = None   # bytes / ns
     write_bw: Optional[float] = None
     pim_ops: Optional[Dict[str, float]] = None  # op -> latency ns
+
+    def __hash__(self):
+        # the generated hash would choke on the pim_ops dict
+        ops = None if self.pim_ops is None \
+            else tuple(sorted(self.pim_ops.items()))
+        return hash((self.name, self.fanout, self.word_bits,
+                     self.read_bw, self.write_bw, ops))
+
+    def to_dict(self) -> Dict:
+        d = dataclasses.asdict(self)
+        if d["pim_ops"] is not None:
+            d["pim_ops"] = dict(sorted(d["pim_ops"].items()))
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "Level":
+        return cls(**d)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,6 +82,44 @@ class ArchSpec:
     word_bits: int = 16
     timing: HBMTiming = dataclasses.field(default_factory=HBMTiming)
     host_bus_gbps: float = 256.0  # GB/s host bus connecting HBM stacks
+
+    def __hash__(self):
+        return hash(self.to_key())
+
+    def to_dict(self) -> Dict:
+        """JSON-safe representation capturing every field (round-trips via
+        ``from_dict``)."""
+        return {
+            "name": self.name,
+            "levels": [lv.to_dict() for lv in self.levels],
+            "target_level": self.target_level,
+            "word_bits": self.word_bits,
+            "timing": dataclasses.asdict(self.timing),
+            "host_bus_gbps": self.host_bus_gbps,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "ArchSpec":
+        return cls(
+            name=d["name"],
+            levels=tuple(Level.from_dict(lv) for lv in d["levels"]),
+            target_level=d["target_level"],
+            word_bits=d["word_bits"],
+            timing=HBMTiming(**d["timing"]),
+            host_bus_gbps=d["host_bus_gbps"],
+        )
+
+    @functools.cached_property
+    def _key(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True,
+                          separators=(",", ":"))
+
+    def to_key(self) -> str:
+        """Stable content key: equal-content specs — including specs built
+        in different processes or round-tripped through ``to_dict`` — share
+        the key. Used by the engine's per-arch cache bundles, ``PerfCache``
+        and the DSE run journal (``repro.dse.persist``)."""
+        return self._key
 
     def level_index(self, name: str) -> int:
         for i, lv in enumerate(self.levels):

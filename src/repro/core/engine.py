@@ -33,8 +33,17 @@ changing a single produced number (DESIGN.md Section 6):
 Equivalence contract: every engine path yields bit-identical scores,
 ready/step matrices, chosen mappings and ``total_ns`` to the reference
 path. Enforced by differential tests (``tests/test_core_engine.py``).
-An engine instance assumes a single ``ArchSpec`` object (one search run);
-caches are flushed if a mapping under a different arch object appears.
+
+Multi-arch reuse (the DSE substrate, ``repro.dse``): one engine instance
+may be shared across any number of ``optimize_network`` runs under
+different ``ArchSpec``s. Caches are bundled per ``ArchSpec.to_key()`` —
+mapping content keys (layer + blocks) are arch-agnostic, so the arch
+content key disambiguates them. Switching architectures activates (or
+creates) that arch's bundle in O(1); returning to a previously seen
+architecture — even via a distinct but content-equal ``ArchSpec`` object,
+e.g. one rebuilt by a DSE worker from ``ArchSpec.from_dict`` — resumes
+its bundle with all memoized analysis intact. ``PerfCache`` is arch-keyed
+directly and shared across bundles.
 """
 from __future__ import annotations
 
@@ -96,37 +105,71 @@ def max_step_in_rect_dedup(m_p: Mapping, plo, phi) -> np.ndarray:
     return total.astype(np.int64)
 
 
+class _ArchCaches:
+    """One architecture's cache bundle (mapping content keys are only
+    unique per arch, so every per-mapping cache lives in a bundle)."""
+
+    __slots__ = ("tiles", "tsep", "tail", "proj", "sepproj", "ready",
+                 "ranks", "score")
+
+    def __init__(self):
+        self.tiles: Dict = {}    # mapping key -> (lo, hi) rect dicts
+        self.tsep: Dict = {}     # mapping key -> separable rect parts
+        self.tail: Dict = {}     # mapping key -> stream tail fraction
+        self.proj: Dict = {}     # (consumer key, cmap key, producer layer)
+        self.sepproj: Dict = {}  # same key -> separable combo decomposition
+        self.ready: Dict = {}    # (producer key, consumer key, cmap key)
+        self.ranks: Dict = {}    # id(LayerResult) -> finish-step ranks
+        self.score: Dict = {}    # scoring-context key -> pinned score
+
+
 class OverlapEngine:
-    """Caches + batched kernels shared across one ``optimize_network`` run."""
+    """Caches + batched kernels shared across ``optimize_network`` runs.
+
+    Reusable across architectures: bundles are keyed on
+    ``ArchSpec.to_key()`` and retained, so a DSE sweep revisiting an arch
+    point resumes its memoized analysis (see module docstring)."""
 
     def __init__(self):
         self._perf = PerfCache()
-        self._tiles: Dict = {}   # mapping key -> (lo, hi) rect dicts
-        self._tsep: Dict = {}    # mapping key -> separable rect parts
-        self._tail: Dict = {}    # mapping key -> stream tail fraction
-        self._proj: Dict = {}    # (consumer key, cmap key, producer layer)
-        self._sepproj: Dict = {} # same key -> separable combo decomposition
-        self._ready: Dict = {}   # (producer key, consumer key, cmap key)
-        self._ranks: Dict = {}   # id(LayerResult) -> finish-step ranks
-        self._score: Dict = {}   # scoring-context key -> pinned score
+        self._bundles: Dict[str, _ArchCaches] = {}
+        self._cur = _ArchCaches()
         self._arch: Optional[ArchSpec] = None
 
     # -- memoized primitives -------------------------------------------------
 
     def _check_arch(self, m: Mapping) -> None:
-        if self._arch is None:
-            self._arch = m.arch
-        elif m.arch is not self._arch:
-            # new search context: content keys are only unique per arch
-            self._tiles.clear()
-            self._tsep.clear()
-            self._tail.clear()
-            self._proj.clear()
-            self._sepproj.clear()
-            self._ready.clear()
-            self._ranks.clear()
-            self._score.clear()
-            self._arch = m.arch
+        if m.arch is self._arch:       # fast path: same spec object
+            return
+        # never clobber a warm bundle for this key (regression: the
+        # initial/post-evict state once overwrote it with an empty one)
+        key = m.arch.to_key()
+        cur = self._bundles.get(key)
+        if cur is None:
+            cur = self._bundles[key] = _ArchCaches()
+        self._cur = cur
+        self._arch = m.arch
+
+    @property
+    def n_arch_bundles(self) -> int:
+        """Distinct architectures this engine holds caches for."""
+        return len(self._bundles)
+
+    def evict_arch(self, arch) -> bool:
+        """Drop one architecture's cache bundle (spec or ``to_key()``).
+
+        Bundles are retained by default so arch revisits resume warm, but
+        a sweep that scores each architecture exactly once (the DSE
+        explorers dedup proposals and the journal absorbs revisits) should
+        evict after scoring to bound memory — the shared ``PerfCache``
+        keeps whatever cross-arch reuse exists. Returns True if a bundle
+        was dropped."""
+        key = arch if isinstance(arch, str) else arch.to_key()
+        bundle = self._bundles.pop(key, None)
+        if bundle is not None and bundle is self._cur:
+            self._cur = _ArchCaches()
+            self._arch = None
+        return bundle is not None
 
     def perf(self, m: Mapping) -> LayerPerf:
         return self._perf.analyze(m)
@@ -134,17 +177,17 @@ class OverlapEngine:
     def tiles(self, m: Mapping):
         self._check_arch(m)
         key = m.cache_key
-        hit = self._tiles.get(key)
+        hit = self._cur.tiles.get(key)
         if hit is None:
-            hit = self._tiles[key] = rect_bounds(m)
+            hit = self._cur.tiles[key] = rect_bounds(m)
         return hit
 
     def tail(self, m: Mapping) -> float:
         self._check_arch(m)
         key = m.cache_key
-        hit = self._tail.get(key)
+        hit = self._cur.tail.get(key)
         if hit is None:
-            hit = self._tail[key] = stream_tail_fraction(m)
+            hit = self._cur.tail[key] = stream_tail_fraction(m)
         return hit
 
     def projection(self, m_c: Mapping, cmap: CoordMap, p_layer: LayerSpec):
@@ -153,7 +196,7 @@ class OverlapEngine:
         scoring reuses it across all producer candidates."""
         self._check_arch(m_c)
         key = (m_c.cache_key, cmap.key(), p_layer)
-        hit = self._proj.get(key)
+        hit = self._cur.proj.get(key)
         if hit is None:
             lo, hi = self.tiles(m_c)
             plo, phi, ready0 = cmap.to_producer(p_layer, m_c.layer, lo, hi)
@@ -161,15 +204,15 @@ class OverlapEngine:
                    for d in OUTPUT_DIMS}
             phi = {d: np.clip(phi[d], 1, p_layer.dim(d))
                    for d in OUTPUT_DIMS}
-            hit = self._proj[key] = (plo, phi, ready0)
+            hit = self._cur.proj[key] = (plo, phi, ready0)
         return hit
 
     def tiles_sep(self, m: Mapping):
         self._check_arch(m)
         key = m.cache_key
-        hit = self._tsep.get(key)
+        hit = self._cur.tsep.get(key)
         if hit is None:
-            hit = self._tsep[key] = rect_bounds_separable(m)
+            hit = self._cur.tsep[key] = rect_bounds_separable(m)
         return hit
 
     # -- ready-step analysis -------------------------------------------------
@@ -180,14 +223,14 @@ class OverlapEngine:
         self._check_arch(m_p)
         cmap = cmap or IdentityMap()
         key = (m_p.cache_key, m_c.cache_key, cmap.key())
-        hit = self._ready.get(key)
+        hit = self._cur.ready.get(key)
         if hit is None:
             if type(cmap) is IdentityMap:
                 hit = self._ready_steps_identity(m_p, m_c, cmap)
             else:
                 plo, phi, ready0 = self.projection(m_c, cmap, m_p.layer)
                 hit = (max_step_in_rect_dedup(m_p, plo, phi), ready0)
-            self._ready[key] = hit
+            self._cur.ready[key] = hit
         return hit
 
     def _sep_decomp(self, m_c: Mapping, cmap: IdentityMap,
@@ -202,7 +245,7 @@ class OverlapEngine:
         Returns the ready-at-0 mask plus, per output dim, the deduplicated
         (bank values, step pairs) combos and their inverse indices."""
         key = (m_c.cache_key, cmap.key(), p_layer)
-        hit = self._sepproj.get(key)
+        hit = self._cur.sepproj.get(key)
         if hit is not None:
             return hit
         bank, stepp, ext = self.tiles_sep(m_c)
@@ -250,7 +293,7 @@ class OverlapEngine:
             th_u = u_t % W + th_min
             u_b, inv_b = np.unique(B, return_inverse=True)
             combos[d] = (u_b, inv_b, tl_u, th_u, inv_t)
-        hit = self._sepproj[key] = (ready0, combos)
+        hit = self._cur.sepproj[key] = (ready0, combos)
         return hit
 
     def _ready_steps_identity(self, m_p: Mapping, m_c: Mapping,
@@ -301,7 +344,7 @@ class OverlapEngine:
         todo: Dict[Tuple, List[int]] = {}
         for k, m in enumerate(cands):
             key = (pk, m.cache_key, ck)
-            hit = self._ready.get(key)
+            hit = self._cur.ready.get(key)
             if hit is not None:
                 out[k] = hit
             else:
@@ -320,7 +363,7 @@ class OverlapEngine:
                 n = ready0.size
                 step = step_cat[ofs:ofs + n].reshape(ready0.shape)
                 ofs += n
-                self._ready[key] = (step, ready0)
+                self._cur.ready[key] = (step, ready0)
                 for k in todo[key]:
                     out[k] = (step, ready0)
         return out
@@ -329,7 +372,7 @@ class OverlapEngine:
         """Per producer result: synchronous per-step finish times and their
         dense ranks (ties share a rank). Ranks are integer sort keys whose
         stable order equals the stable order of the float ready times."""
-        ent = self._ranks.get(id(prod))
+        ent = self._cur.ranks.get(id(prod))
         if ent is None or ent[0] is not prod:
             fin_step = prod.finish_ns.max(axis=0)
             order = np.argsort(fin_step, kind="stable")
@@ -337,7 +380,7 @@ class OverlapEngine:
             ranks = np.empty(fin_step.size, dtype=np.int64)
             ranks[order] = np.concatenate(
                 [[0], np.cumsum(vals[1:] > vals[:-1])])
-            ent = self._ranks[id(prod)] = (prod, fin_step, ranks)
+            ent = self._cur.ranks[id(prod)] = (prod, fin_step, ranks)
         return ent[1], ent[2]
 
     def ready_matrix(self, mapping: Mapping, edges: Sequence[Edge],
@@ -472,7 +515,7 @@ class OverlapEngine:
         out = np.empty(len(cands), dtype=np.float64)
         for k, m in enumerate(cands):
             skey = (mode, m.cache_key, has_consumer, pids)
-            hit = self._score.get(skey)
+            hit = self._cur.score.get(skey)
             if hit is not None and all(a is b for a, b in zip(hit[0],
                                                               prods)):
                 out[k] = hit[1]
@@ -491,7 +534,7 @@ class OverlapEngine:
                 else:
                     out[k] = overlapped_end(ready, perf.step_ns) \
                         + perf.output_move_ns + penalty
-            self._score[skey] = (prods, out[k])
+            self._cur.score[skey] = (prods, out[k])
         return out
 
     def score_backward(self, i: int, m: Mapping,
@@ -506,7 +549,7 @@ class OverlapEngine:
                                 for j in _consumers_of(edges, i)
                                 if j in fixed))
         skey = ("bw", mode, i, m.cache_key, cons_key)
-        hit = self._score.get(skey)
+        hit = self._cur.score.get(skey)
         if hit is not None:
             return hit[1]
         perf = self.perf(m)
@@ -516,7 +559,7 @@ class OverlapEngine:
                             (m.n_banks, m.n_steps)).copy())}
         cons = [j for j in _consumers_of(edges, i) if j in fixed]
         if mode == "original" or not cons:
-            self._score[skey] = (None, perf.sequential_ns)
+            self._cur.score[skey] = (None, perf.sequential_ns)
             return perf.sequential_ns
         worst = 0.0
         for j in cons:
@@ -529,7 +572,7 @@ class OverlapEngine:
                     ready, pc.step_ns, pc.tile_move_ns).end_ns)
             else:
                 worst = max(worst, overlapped_end(ready, pc.step_ns))
-        self._score[skey] = (None, worst)
+        self._cur.score[skey] = (None, worst)
         return worst
 
 

@@ -111,21 +111,70 @@ def analyze(mapping: Mapping) -> LayerPerf:
         sequential_ns=compute_ns + output_move_ns, energy_pj=energy)
 
 
-class PerfCache:
-    """Memoizes ``analyze()`` on ``Mapping.cache_key`` (layer + blocks).
+# ---------------------------------------------------------------------------
+# Architecture cost proxies (DSE objectives; see repro.dse).
+#
+# Deliberately coarse: the DSE subsystem needs a consistent partial order
+# over configurations, not sign-off-quality silicon numbers. Area counts the
+# compute columns (the memory arrays doing bit-serial work), per-bank
+# periphery (sense amps, row decoder, PIM control) and per-channel IO/TSV
+# overhead. Power is peak: every bank running back-to-back AAPs (activation
+# energy over the row-cycle time — faster timing bins burn more) plus the
+# host-bus IO at full tilt.
+# ---------------------------------------------------------------------------
 
-    ``ArchSpec`` is not hashable (per-level op dicts), so entries pin the
-    arch instance and are invalidated when a mapping with the same content
-    key arrives under a different arch object. One instance per search run
-    (the batched engine owns one)."""
+_AREA_COL_MM2 = 1e-4     # one compute column (array slice)
+_AREA_BANK_MM2 = 0.02    # bank periphery
+_AREA_CHANNEL_MM2 = 0.5  # channel IO / TSV stack
+
+
+def _channel_count(arch: ArchSpec) -> int:
+    """Instances of the level just below the root (channels / tiles)."""
+    return arch.instances_at(min(1, len(arch.levels) - 1))
+
+
+def _physical_banks(arch: ArchSpec) -> int:
+    """Instances of the level above compute (banks / blocks) — the
+    *physical* structure, independent of where ``target_level`` puts the
+    overlap analysis (identical hardware must cost identical area)."""
+    return arch.instances_at(max(0, len(arch.levels) - 2))
+
+
+def arch_area_proxy(arch: ArchSpec) -> float:
+    """Relative die area (mm^2-ish) of a PIM configuration."""
+    banks = _physical_banks(arch)
+    cols = arch.instances_at(len(arch.levels) - 1)  # all compute columns
+    return (cols * _AREA_COL_MM2 + banks * _AREA_BANK_MM2
+            + _channel_count(arch) * _AREA_CHANNEL_MM2)
+
+
+def arch_power_proxy(arch: ArchSpec) -> float:
+    """Peak power (W-ish): all banks issuing AAPs continuously + IO.
+
+    ``e_act / t_aap`` is pJ/ns = mW per continuously-activating bank, so a
+    scaled-down (faster) timing raises power — the knob that keeps "just
+    shrink the timing" from dominating the Pareto frontier for free."""
+    t = arch.timing
+    bank_mw = t.e_act / t.t_aap
+    io_mw = arch.host_bus_gbps * 8 * t.e_io  # bytes/ns * bits * pJ/bit = mW
+    return (_physical_banks(arch) * bank_mw + io_mw) / 1e3
+
+
+class PerfCache:
+    """Memoizes ``analyze()`` on ``(Mapping.cache_key, ArchSpec.to_key())``.
+
+    ``Mapping.cache_key`` interns (layer, blocks) only, so the arch content
+    key disambiguates equal nests under different architectures. Keying on
+    content (not arch identity) lets one cache serve a multi-arch DSE sweep:
+    revisiting an architecture — even via a distinct but equal ``ArchSpec``
+    object — hits the existing entries."""
 
     def __init__(self):
         self._store: dict = {}
 
     def analyze(self, mapping: Mapping) -> LayerPerf:
-        key = mapping.cache_key
+        key = (mapping.cache_key, mapping.arch.to_key())
         hit = self._store.get(key)
-        if hit is None or hit[0] is not mapping.arch:
-            hit = (mapping.arch, analyze(mapping))
-            self._store[key] = hit
-        return hit[1]
+        if hit is None:
+            hit = self._store[key] = analyze(mapping)
+        return hit

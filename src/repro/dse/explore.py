@@ -1,0 +1,374 @@
+"""DSE explorers: grid / random / evolutionary search over arch spaces.
+
+Each explorer proposes ``DesignPoint``s and scores them by running the
+full overlap-driven mapping search (``optimize_network`` with the batched
+engine) for the configured network/mode/strategy. Scoring goes through one
+shared funnel (``_Evaluator``) that
+
+* serves already-scored points from the ``RunJournal`` (content-keyed —
+  re-running a finished sweep performs **zero** new mapping searches),
+* in serial mode shares a single ``OverlapEngine`` across all arch points
+  (per-arch cache bundles, see ``core.engine``; a point's bundle is
+  evicted once scored — each arch is visited once per sweep — while the
+  engine's content-keyed ``PerfCache`` persists), and
+* with ``workers > 0`` fans evaluations out to a process pool. Workers
+  receive the *built* ``ArchSpec`` (``to_dict`` round-trip), never the
+  ``ParamSpace`` — custom spaces carry unpicklable constraint lambdas,
+  and rebuilding a shipped space in the worker would silently diverge
+  from a caller-supplied one. Each worker keeps a persistent engine;
+  results are bit-identical to serial mode (differentially tested).
+
+All explorers are deterministic in ``DSEConfig.seed``: the same config
+proposes the same points in the same order (the evolutionary explorer
+selects on journal-identical scores), which is what makes journal resume
+exact rather than best-effort.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from ..core.arch import ArchSpec
+from ..core.engine import OverlapEngine, optimize_network_engine
+from ..core.perf_model import arch_area_proxy, arch_power_proxy
+from ..core.interface import describe
+from ..core.search import MODES, STRATEGIES, NetworkResult, SearchConfig
+from .pareto import ParetoFrontier
+from .persist import RunJournal, content_key
+from .space import DesignPoint, ParamSpace, get_space
+
+EXPLORERS = ("grid", "random", "evolve")
+
+
+@dataclasses.dataclass
+class DSEConfig:
+    """One sweep: which space to search, how, and how each point is
+    scored. ``budget`` counts *proposed* points (journal hits included —
+    a resumed sweep proposes the same points and evaluates none)."""
+
+    family: str = "dram_pim"
+    network: str = "resnet18"
+    mode: str = "transform"
+    strategy: str = "forward"
+    explorer: str = "evolve"
+    budget: int = 64
+    seed: int = 1
+    # per-point mapping-search budget
+    n_candidates: int = 8
+    max_steps: int = 2048
+    refine_passes: int = 0
+    # evolutionary knobs
+    population: int = 8
+    mutation_rate: float = 0.5
+    # evaluation backend
+    workers: int = 0              # 0 = serial, shared engine
+    journal_path: Optional[str] = None
+
+    def __post_init__(self):
+        assert self.mode in MODES, self.mode
+        assert self.strategy in STRATEGIES, self.strategy
+        assert self.explorer in EXPLORERS, self.explorer
+        assert self.budget >= 1, "budget must be >= 1"
+
+    def search_config(self) -> SearchConfig:
+        return SearchConfig(n_candidates=self.n_candidates, seed=self.seed,
+                            max_steps=self.max_steps, mode=self.mode,
+                            strategy=self.strategy,
+                            refine_passes=self.refine_passes,
+                            use_engine=True)
+
+
+@dataclasses.dataclass
+class DSEResult:
+    config: DSEConfig
+    records: List[Dict]                  # proposal order
+    frontier: ParetoFrontier
+    baseline: Dict                       # the space's default point
+    stats: Dict[str, float]
+
+    def best_within_area(self, area_mm2: Optional[float] = None) \
+            -> Optional[Dict]:
+        """Lowest-latency record with area proxy <= the given budget
+        (default: the baseline's area) — the iso-area comparison."""
+        cap = self.baseline["area_mm2"] if area_mm2 is None else area_mm2
+        eligible = [r for r in self.records if r["area_mm2"] <= cap + 1e-12]
+        return min(eligible, key=lambda r: r["total_ns"], default=None)
+
+
+# ---------------------------------------------------------------------------
+# Point evaluation (one full mapping search).
+# ---------------------------------------------------------------------------
+
+def key_for(dcfg: DSEConfig, arch_key: str) -> str:
+    """THE journal-key derivation — every scoring-relevant ``DSEConfig``
+    field must appear here (and only here), or resumed sweeps would
+    silently serve stale scores for changed evaluations."""
+    return content_key(dcfg.network, dcfg.mode, dcfg.strategy, dcfg.seed,
+                       dcfg.n_candidates, dcfg.max_steps,
+                       dcfg.refine_passes, arch_key)
+
+
+def point_key(space: ParamSpace, point: DesignPoint,
+              dcfg: DSEConfig) -> str:
+    return key_for(dcfg, space.build(point).to_key())
+
+
+def network_energy_pj(result: NetworkResult) -> float:
+    return float(sum(l.perf.energy_pj for l in result.layers))
+
+
+def _search_arch(arch, dcfg: DSEConfig,
+                 engine: Optional[OverlapEngine] = None) -> Dict:
+    """The mapping-search half of an evaluation (runs in workers too)."""
+    desc = describe(dcfg.network)
+    t0 = time.perf_counter()
+    res = optimize_network_engine(desc.layers, desc.edges, arch,
+                                  dcfg.search_config(), engine=engine)
+    return {
+        "total_ns": float(res.total_ns),
+        "energy_pj": network_energy_pj(res),
+        "n_layers": len(res.layers),
+        "wall_s": time.perf_counter() - t0,
+    }
+
+
+def _make_record(point: DesignPoint, dcfg: DSEConfig,
+                 arch: ArchSpec, search_fields: Dict) -> Dict:
+    costs = {"area_mm2": arch_area_proxy(arch),
+             "power_w": arch_power_proxy(arch)}
+    return {
+        "family": point.family,
+        "point": point.as_dict(),
+        "point_key": point.key(),
+        "arch_name": arch.name,
+        "network": dcfg.network,
+        "mode": dcfg.mode,
+        "strategy": dcfg.strategy,
+        "seed": dcfg.seed,
+        "n_candidates": dcfg.n_candidates,
+        "max_steps": dcfg.max_steps,
+        "area_mm2": costs["area_mm2"],
+        "power_w": costs["power_w"],
+        **search_fields,
+    }
+
+
+def evaluate_point(space: ParamSpace, point: DesignPoint, dcfg: DSEConfig,
+                   engine: Optional[OverlapEngine] = None) -> Dict:
+    """Score one design point: build the arch, run the mapping search,
+    attach the static cost proxies."""
+    arch = space.build(point)
+    return _make_record(point, dcfg, arch,
+                        _search_arch(arch, dcfg, engine))
+
+
+# Process-pool worker state: one engine per worker process, reused across
+# every point that worker evaluates. Workers receive the *built*
+# ``ArchSpec`` (via to_dict), never the ParamSpace: custom spaces carry
+# unpicklable constraint lambdas, and rebuilding a shipped space in the
+# worker would silently diverge from a caller-supplied one.
+_WORKER_ENGINE: Optional[OverlapEngine] = None
+
+
+def _pool_eval(payload: Tuple[Dict, Dict]) -> Dict:
+    global _WORKER_ENGINE
+    if _WORKER_ENGINE is None:
+        _WORKER_ENGINE = OverlapEngine()
+    dcfg_dict, arch_dict = payload
+    dcfg = DSEConfig(**dcfg_dict)
+    arch = ArchSpec.from_dict(arch_dict)
+    fields = _search_arch(arch, dcfg, engine=_WORKER_ENGINE)
+    # each arch point is scored once per sweep (explorers dedup, the
+    # journal absorbs revisits) — evict its bundle to bound worker memory
+    _WORKER_ENGINE.evict_arch(arch)
+    return fields
+
+
+class _Evaluator:
+    """Journal-aware batch scorer (serial shared engine or process pool)."""
+
+    def __init__(self, space: ParamSpace, dcfg: DSEConfig,
+                 journal: RunJournal):
+        self.space = space
+        self.dcfg = dcfg
+        self.journal = journal
+        self.engine = OverlapEngine()
+        self.n_evaluated = 0
+        self.n_from_journal = 0
+        self._pool = None
+        if dcfg.workers > 0:
+            import concurrent.futures
+            self._pool = concurrent.futures.ProcessPoolExecutor(
+                max_workers=dcfg.workers)
+
+    def close(self) -> None:
+        if self._pool is not None:
+            self._pool.shutdown()
+            self._pool = None
+
+    def __call__(self, points: Sequence[DesignPoint]) -> List[Dict]:
+        """Scores in point order; journal hits cost nothing."""
+        built = [self.space.build(p) for p in points]
+        keys = [key_for(self.dcfg, a.to_key()) for a in built]
+        out: List[Optional[Dict]] = [self.journal.get(k) for k in keys]
+        misses = [i for i, r in enumerate(out) if r is None]
+        self.n_from_journal += len(points) - len(misses)
+        if misses:
+            archs = [built[i] for i in misses]
+            if self._pool is not None:
+                dd = dataclasses.asdict(self.dcfg)
+                fields = list(self._pool.map(
+                    _pool_eval, [(dd, a.to_dict()) for a in archs]))
+            else:
+                fields = []
+                for a in archs:
+                    fields.append(_search_arch(a, self.dcfg,
+                                               engine=self.engine))
+                    # scored once per sweep: evict to bound memory while
+                    # the engine's PerfCache keeps cross-arch reuse
+                    self.engine.evict_arch(a)
+            for i, a, f in zip(misses, archs, fields):
+                rec = _make_record(points[i], self.dcfg, a, f)
+                out[i] = self.journal.record(keys[i], rec)
+            self.n_evaluated += len(misses)
+        return out  # type: ignore[return-value]
+
+
+# ---------------------------------------------------------------------------
+# Explorers. Each yields batches of fresh points until the budget is spent.
+# ---------------------------------------------------------------------------
+
+def _grid_points(space: ParamSpace, dcfg: DSEConfig) -> List[List[DesignPoint]]:
+    """Default point first (the baseline), then grid order."""
+    out, seen = [space.default()], {space.default().key()}
+    for p in space.enumerate():
+        if len(out) >= dcfg.budget:
+            break
+        if p.key() not in seen:
+            seen.add(p.key())
+            out.append(p)
+    return [out]
+
+
+def _random_points(space: ParamSpace, dcfg: DSEConfig) \
+        -> List[List[DesignPoint]]:
+    rng = random.Random(dcfg.seed)
+    out, seen = [space.default()], {space.default().key()}
+    tries = 0
+    while len(out) < dcfg.budget and tries < dcfg.budget * 64:
+        p = space.sample(rng)
+        tries += 1
+        if p.key() not in seen:
+            seen.add(p.key())
+            out.append(p)
+    return [out]
+
+
+def run_dse(dcfg: DSEConfig, space: Optional[ParamSpace] = None,
+            journal: Optional[RunJournal] = None) -> DSEResult:
+    """Run one sweep; returns records, the Pareto frontier and stats.
+
+    The space default point is always proposed first, so every result
+    carries a baseline for iso-area comparisons."""
+    space = space or get_space(dcfg.family)
+    journal = journal if journal is not None \
+        else RunJournal(dcfg.journal_path)
+    ev = _Evaluator(space, dcfg, journal)
+    frontier = ParetoFrontier()
+    records: List[Dict] = []
+    t0 = time.perf_counter()
+    try:
+        if dcfg.explorer == "grid":
+            batches = _grid_points(space, dcfg)
+        elif dcfg.explorer == "random":
+            batches = _random_points(space, dcfg)
+        else:
+            batches = None  # evolve proposes adaptively below
+
+        if batches is not None:
+            for batch in batches:
+                for p, rec in zip(batch, ev(batch)):
+                    records.append(rec)
+                    frontier.add_record(p.key(), rec)
+        else:
+            _run_evolve(space, dcfg, ev, frontier, records)
+    finally:
+        ev.close()
+    baseline = records[0]
+    stats = {
+        "proposed": len(records),
+        "evaluated": ev.n_evaluated,
+        "from_journal": ev.n_from_journal,
+        "frontier": len(frontier),
+        "wall_s": time.perf_counter() - t0,
+    }
+    return DSEResult(config=dcfg, records=records, frontier=frontier,
+                     baseline=baseline, stats=stats)
+
+
+def _run_evolve(space: ParamSpace, dcfg: DSEConfig, ev: _Evaluator,
+                frontier: ParetoFrontier, records: List[Dict]) -> None:
+    """(mu + lambda)-style evolution over arch genes.
+
+    Generation 0 is the default point plus random samples. Parents are
+    tournament-selected with Pareto-frontier membership beating raw
+    latency; children are per-gene crossover then (p=mutation_rate) an
+    adjacent-value mutation. Proposals are deduplicated against everything
+    seen, so the budget is spent on distinct points."""
+    rng = random.Random(dcfg.seed ^ 0x9E3779B9)
+    pop_size = max(2, min(dcfg.population, dcfg.budget))
+
+    init = [space.default()]
+    seen = {init[0].key()}
+    tries = 0
+    while len(init) < pop_size and tries < pop_size * 64:
+        p = space.sample(rng)
+        tries += 1
+        if p.key() not in seen:
+            seen.add(p.key())
+            init.append(p)
+    init = init[:dcfg.budget]
+    pts = list(init)
+    recs = ev(pts)
+    for p, rec in zip(pts, recs):
+        records.append(rec)
+        frontier.add_record(p.key(), rec)
+    pool: List[Tuple[DesignPoint, Dict]] = list(zip(pts, recs))
+    front_keys = frontier.key_set()   # refreshed once per generation
+
+    def fitness(entry: Tuple[DesignPoint, Dict]) -> Tuple[int, float]:
+        p, rec = entry
+        return (0 if rec["point_key"] in front_keys else 1,
+                rec["total_ns"])
+
+    def select() -> DesignPoint:
+        a, b = rng.choice(pool), rng.choice(pool)
+        return min((a, b), key=fitness)[0]
+
+    while len(records) < dcfg.budget:
+        batch: List[DesignPoint] = []
+        attempts = 0
+        want = min(pop_size, dcfg.budget - len(records))
+        while len(batch) < want and attempts < want * 64:
+            attempts += 1
+            child = space.crossover(select(), select(), rng)
+            if rng.random() < dcfg.mutation_rate:
+                child = space.mutate(child, rng)
+            if child.key() in seen:
+                child = space.mutate(child, rng)
+            if child.key() in seen:
+                continue
+            seen.add(child.key())
+            batch.append(child)
+        if not batch:  # space exhausted
+            break
+        recs = ev(batch)
+        for p, rec in zip(batch, recs):
+            records.append(rec)
+            frontier.add_record(p.key(), rec)
+        front_keys = frontier.key_set()
+        pool.extend(zip(batch, recs))
+        pool.sort(key=fitness)
+        del pool[max(pop_size, 2):]

@@ -1,0 +1,95 @@
+"""Content-keyed, resumable JSONL run journal for DSE sweeps.
+
+Every evaluated design point appends one JSON line::
+
+    {"key": <sha1>, "point": {...}, "family": ..., "total_ns": ..., ...}
+
+``key`` is a SHA-1 over the *content* of the evaluation — network, mode,
+strategy, search budget parameters, seed and the built ``ArchSpec``'s
+``to_key()`` — mirroring the engine's content-keyed caches: any run that
+would produce bit-identical results shares the key, regardless of which
+process (or which explorer) produced it. Re-running a sweep therefore
+serves already-scored points from the journal and performs zero new
+mapping searches.
+
+Loading tolerates a truncated final line (a run killed mid-append); later
+lines win on key collisions, so re-appends are harmless.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+from typing import Dict, Iterator, Optional
+
+
+def content_key(network: str, mode: str, strategy: str, seed: int,
+                n_candidates: int, max_steps: int, refine_passes: int,
+                arch_key: str) -> str:
+    """Stable identity of one (network, search config, arch) evaluation."""
+    blob = json.dumps(
+        {"network": network, "mode": mode, "strategy": strategy,
+         "seed": seed, "n_candidates": n_candidates,
+         "max_steps": max_steps, "refine_passes": refine_passes,
+         "arch_key": arch_key},
+        sort_keys=True, separators=(",", ":"))
+    return hashlib.sha1(blob.encode()).hexdigest()
+
+
+class RunJournal:
+    """Append-only JSONL store keyed on ``content_key`` values.
+
+    ``path=None`` keeps the journal in memory only (tests, throwaway
+    sweeps). Appends flush eagerly so concurrent readers and killed runs
+    observe a prefix of complete lines."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self._records: Dict[str, Dict] = {}
+        self._needs_newline = False
+        if path and os.path.exists(path):
+            with open(path, "rb") as bf:
+                bf.seek(0, os.SEEK_END)
+                if bf.tell() > 0:
+                    bf.seek(-1, os.SEEK_END)
+                    # a truncated tail must not swallow the next append
+                    self._needs_newline = bf.read(1) != b"\n"
+            with open(path, "r", encoding="utf-8") as fh:
+                for line in fh:
+                    line = line.strip()
+                    if not line:
+                        continue
+                    try:
+                        rec = json.loads(line)
+                    except json.JSONDecodeError:
+                        continue  # truncated tail of a killed run
+                    if isinstance(rec, dict) and "key" in rec:
+                        self._records[rec["key"]] = rec
+
+    def __len__(self) -> int:
+        return len(self._records)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._records
+
+    def __iter__(self) -> Iterator[Dict]:
+        return iter(self._records.values())
+
+    def get(self, key: str) -> Optional[Dict]:
+        return self._records.get(key)
+
+    def record(self, key: str, rec: Dict) -> Dict:
+        """Store (and append, if file-backed) one evaluation record."""
+        rec = {"key": key, **{k: v for k, v in rec.items() if k != "key"}}
+        self._records[key] = rec
+        if self.path:
+            d = os.path.dirname(self.path)
+            if d:
+                os.makedirs(d, exist_ok=True)
+            with open(self.path, "a", encoding="utf-8") as fh:
+                if self._needs_newline:
+                    fh.write("\n")
+                    self._needs_newline = False
+                fh.write(json.dumps(rec, sort_keys=True) + "\n")
+                fh.flush()
+        return rec

@@ -254,10 +254,11 @@ def test_search_differential_with_refinement(strategy):
                              refine_passes=2))
 
 
-def test_engine_reuse_across_archs_flushes_caches():
+def test_engine_reuse_across_archs_keyed_bundles():
     """A reused engine must not serve cached analysis from a previous
-    arch: content keys are arch-agnostic, so every cache-hit path checks
-    the arch object first (regression test for a cache-staleness bug)."""
+    arch: mapping content keys are arch-agnostic, so caches are bundled
+    per ``ArchSpec.to_key()`` (regression test for a cache-staleness bug,
+    now also the DSE multi-arch reuse contract)."""
     net = conv_chain()
     edges = chain_edges(net)
     arch_a = small_arch(64)
@@ -273,6 +274,79 @@ def test_engine_reuse_across_archs_flushes_caches():
         m = candidates(net[1], arch, c, salt=1)[0]
         assert eng.score_backward(1, m, edges, fixed, "transform") \
             == _score_backward(1, m, edges, fixed, "transform")
+    # two distinct archs -> two bundles, revisits resume the existing one
+    assert eng.n_arch_bundles == 2
+
+
+def test_engine_evict_arch():
+    """Evicting a bundle frees it without breaking later searches; a
+    fresh search under the evicted arch rebuilds from scratch and still
+    matches the reference."""
+    net = conv_chain()
+    edges = chain_edges(net)
+    arch_a = small_arch(64)
+    arch_b = dataclasses.replace(arch_a, word_bits=8)
+    eng = OverlapEngine()
+    c = cfg(mode="transform")
+    optimize_network_engine(net, edges, arch_a, c, engine=eng)
+    optimize_network_engine(net, edges, arch_b, c, engine=eng)
+    assert eng.n_arch_bundles == 2
+    assert eng.evict_arch(arch_b)          # current bundle: resets cleanly
+    assert not eng.evict_arch(arch_b)      # already gone
+    assert eng.evict_arch(arch_a.to_key()) # by key string
+    assert eng.n_arch_bundles == 0
+    got = optimize_network_engine(net, edges, arch_b, c, engine=eng)
+    ref = _optimize_network_reference(net, edges, arch_b, c)
+    assert got.total_ns == ref.total_ns
+
+
+def test_evict_arch_does_not_clobber_other_bundles():
+    """Evicting the current arch must not make the next arch switch
+    overwrite a different arch's warm bundle (regression: the post-evict
+    state once registered its fresh bundle under the revisited key)."""
+    net = conv_chain()
+    edges = chain_edges(net)
+    arch_a = small_arch(64)
+    arch_b = dataclasses.replace(arch_a, word_bits=8)
+    eng = OverlapEngine()
+    c = cfg(mode="transform")
+    optimize_network_engine(net, edges, arch_a, c, engine=eng)
+    optimize_network_engine(net, edges, arch_b, c, engine=eng)
+    bundle_b = eng._bundles[arch_b.to_key()]
+    n_ready_b = len(bundle_b.ready)
+    assert n_ready_b > 0
+    optimize_network_engine(net, edges, arch_a, c, engine=eng)
+    eng.evict_arch(arch_a)
+    got = optimize_network_engine(net, edges, arch_b, c, engine=eng)
+    assert eng._bundles[arch_b.to_key()] is bundle_b
+    assert len(bundle_b.ready) == n_ready_b  # warm, not recomputed
+    ref = _optimize_network_reference(net, edges, arch_b, c)
+    assert got.total_ns == ref.total_ns
+
+
+def test_engine_multi_arch_bundle_retention():
+    """Returning to a previously seen architecture — via a content-equal
+    but distinct ``ArchSpec`` object — must resume its cache bundle: the
+    memoized ready-step analysis is served, not recomputed."""
+    net = conv_chain()
+    edges = chain_edges(net)
+    arch_a = small_arch(64)
+    arch_b = dataclasses.replace(arch_a, word_bits=8)
+    eng = OverlapEngine()
+    c = cfg(mode="transform")
+    optimize_network_engine(net, edges, arch_a, c, engine=eng)
+    ready_a = eng._bundles[arch_a.to_key()].ready
+    n_ready = len(ready_a)
+    assert n_ready > 0
+    optimize_network_engine(net, edges, arch_b, c, engine=eng)
+    # rebuilt spec, equal content: same bundle object, no new ready entries
+    arch_a2 = type(arch_a).from_dict(arch_a.to_dict())
+    assert arch_a2 is not arch_a
+    res = optimize_network_engine(net, edges, arch_a2, c, engine=eng)
+    assert eng._bundles[arch_a2.to_key()].ready is ready_a
+    assert len(ready_a) == n_ready
+    ref = _optimize_network_reference(net, edges, arch_a, c)
+    assert res.total_ns == ref.total_ns
 
 
 def test_use_engine_flag_dispatch():

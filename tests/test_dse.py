@@ -1,0 +1,385 @@
+"""DSE subsystem tests: spaces, Pareto frontier, journal resume, explorer
+determinism and the end-to-end (arch x mapping) co-search.
+
+Search-running tests use a tiny conv chain (not resnet18) so the whole
+module stays in the fast core loop; the full-budget acceptance path is
+exercised by the ``dse`` benchmark subcommand and CI smoke job.
+"""
+import json
+import random
+
+import pytest
+
+from repro.core import (ArchSpec, LayerSpec, arch_area_proxy,
+                        arch_power_proxy, chain_edges, dram_pim)
+from repro.dse import (DEFAULT_OBJECTIVES, DSEConfig, DesignPoint,
+                       ParamSpace, ParetoFrontier, RunJournal, dominates,
+                       dram_space, get_space, reram_space, run_dse,
+                       tpu_space)
+from repro.dse.explore import _Evaluator, evaluate_point, point_key
+from repro.dse.report import frontier_table, summarize
+
+
+def tiny_space() -> ParamSpace:
+    return ParamSpace(
+        family="dram_pim",
+        axes={
+            "channels_per_layer": (1, 2),
+            "banks_per_channel": (2, 4),
+            "columns_per_bank": (64, 128),
+        },
+        constraints=[
+            lambda p: p["channels_per_layer"] * p["banks_per_channel"] <= 4,
+        ],
+        defaults={"channels_per_layer": 2, "banks_per_channel": 2,
+                  "columns_per_bank": 64},
+    )
+
+
+def tiny_dcfg(**kw) -> DSEConfig:
+    base = dict(network="resnet18", mode="transform", budget=4,
+                n_candidates=3, max_steps=256, seed=0, explorer="grid")
+    base.update(kw)
+    return DSEConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# Parameter spaces.
+# ---------------------------------------------------------------------------
+
+def test_space_enumerate_respects_constraints():
+    sp = tiny_space()
+    pts = list(sp.enumerate())
+    # 2*2*2 = 8 grid points, minus the (2 channels x 4 banks) pairs
+    assert len(pts) == 6
+    for p in pts:
+        d = p.as_dict()
+        assert d["channels_per_layer"] * d["banks_per_channel"] <= 4
+    assert len({p.key() for p in pts}) == len(pts)
+
+
+def test_space_default_builds_factory_default():
+    assert dram_space().build(dram_space().default()) == dram_pim()
+
+
+def test_space_point_rejects_invalid():
+    sp = tiny_space()
+    with pytest.raises(ValueError):
+        sp.point(channels_per_layer=2, banks_per_channel=4,
+                 columns_per_bank=64)  # violates the fanout constraint
+    with pytest.raises(ValueError):
+        sp.point(channels_per_layer=3, banks_per_channel=2,
+                 columns_per_bank=64)  # off-axis value
+
+
+def test_space_build_applies_timing_scale_and_target():
+    sp = dram_space()
+    p = sp.point(timing_scale=1.25, target_level="Channel")
+    arch = sp.build(p)
+    base = dram_pim()
+    assert arch.target_level == "Channel"
+    assert arch.timing.t_rc == base.timing.t_rc * 1.25
+    ops = arch.compute_level.pim_ops
+    assert ops["add"] == base.compute_level.pim_ops["add"] * 1.25
+    # energies are untouched: scaled bins change power, not energy
+    assert arch.timing.e_act == base.timing.e_act
+    assert arch_power_proxy(arch) < arch_power_proxy(base)
+
+
+def test_space_build_scales_pinned_ops_for_precision():
+    """word_bits=8 must not get its energy win at unchanged latency: the
+    pinned 16-bit op latencies rescale (add ~n, mul ~n^2 — the Section
+    IV-C bit-serial structure), or low precision would Pareto-dominate as
+    a pure modeling artifact."""
+    sp = dram_space()
+    base_ops = dram_pim().compute_level.pim_ops
+    arch8 = sp.build(sp.point(word_bits=8))
+    assert arch8.compute_level.pim_ops["add"] == base_ops["add"] * 0.5
+    assert arch8.compute_level.pim_ops["mul"] == base_ops["mul"] * 0.25
+    assert sp.build(sp.default()).compute_level.pim_ops == base_ops
+
+
+def test_space_mutate_steps_one_gene():
+    sp = tiny_space()
+    rng = random.Random(3)
+    for _ in range(32):
+        p = sp.sample(rng)
+        q = sp.mutate(p, rng)
+        assert q.key() != p.key()
+        assert sp.is_valid(q.as_dict())
+        diff = [k for k in q.as_dict()
+                if q.as_dict()[k] != p.as_dict()[k]]
+        assert len(diff) == 1
+
+
+def test_space_crossover_mixes_parent_genes():
+    sp = tiny_space()
+    rng = random.Random(4)
+    a = sp.point(channels_per_layer=1, banks_per_channel=2,
+                 columns_per_bank=64)
+    b = sp.point(channels_per_layer=2, banks_per_channel=2,
+                 columns_per_bank=128)
+    for _ in range(16):
+        c = sp.crossover(a, b, rng).as_dict()
+        for k, v in c.items():
+            assert v in (a.as_dict()[k], b.as_dict()[k])
+        assert sp.is_valid(c)
+
+
+def test_all_shipped_spaces_build_their_points():
+    for name in ("dram_pim", "reram_pim", "tpu_spatial"):
+        sp = get_space(name)
+        rng = random.Random(0)
+        for p in [sp.default()] + [sp.sample(rng) for _ in range(5)]:
+            arch = sp.build(p)
+            assert isinstance(arch, ArchSpec)
+            assert arch_area_proxy(arch) > 0
+            assert arch_power_proxy(arch) > 0
+            # points round-trip through their content keys
+            assert sp.point(**p.as_dict()) == p
+
+
+def test_cost_proxies_ignore_analysis_level():
+    """Moving the overlap-analysis level (a DSE axis) does not change
+    the physical hardware, so it must not change its area/power cost —
+    otherwise Channel-target points spuriously dominate the frontier."""
+    import dataclasses
+    base = dram_pim()
+    moved = dataclasses.replace(base, target_level="Channel")
+    assert arch_area_proxy(moved) == arch_area_proxy(base)
+    assert arch_power_proxy(moved) == arch_power_proxy(base)
+
+
+def test_area_proxy_orders_allocations():
+    """More banks/columns => more area; fewer channels => less area."""
+    base = dram_pim(2, 8, 8192)
+    assert arch_area_proxy(dram_pim(2, 16, 8192)) > arch_area_proxy(base)
+    assert arch_area_proxy(dram_pim(2, 8, 16384)) > arch_area_proxy(base)
+    assert arch_area_proxy(dram_pim(1, 16, 8192)) < arch_area_proxy(base)
+
+
+# ---------------------------------------------------------------------------
+# Pareto frontier.
+# ---------------------------------------------------------------------------
+
+def test_dominates_semantics():
+    assert dominates((1, 1), (2, 1))
+    assert not dominates((1, 1), (1, 1))
+    assert not dominates((1, 2), (2, 1))
+
+
+def test_frontier_incremental_pruning():
+    f = ParetoFrontier(("a", "b"))
+    assert f.add("p1", (2.0, 2.0))
+    assert f.add("p2", (1.0, 3.0))       # tradeoff: kept
+    assert not f.add("p3", (3.0, 3.0))   # dominated: rejected
+    assert f.add("p4", (1.0, 1.0))       # dominates p1 and p2: evicts both
+    assert len(f) == 1 and f.points[0].key == "p4"
+    assert not f.add("p5", (1.0, 1.0))   # duplicate objectives: rejected
+    assert f.dominated((1.5, 1.0))
+    assert not f.dominated((0.5, 5.0))
+
+
+def test_frontier_best_and_record_api():
+    f = ParetoFrontier(DEFAULT_OBJECTIVES)
+    f.add_record("x", {"total_ns": 10.0, "energy_pj": 5.0,
+                       "area_mm2": 2.0})
+    f.add_record("y", {"total_ns": 5.0, "energy_pj": 5.0,
+                       "area_mm2": 4.0})
+    assert f.best("total_ns").key == "y"
+    assert f.best("area_mm2").key == "x"
+
+
+# ---------------------------------------------------------------------------
+# Journal persistence + resume.
+# ---------------------------------------------------------------------------
+
+def test_journal_roundtrip_and_truncation(tmp_path):
+    path = str(tmp_path / "j.jsonl")
+    j = RunJournal(path)
+    j.record("k1", {"total_ns": 1.0})
+    j.record("k2", {"total_ns": 2.0})
+    with open(path, "a") as fh:
+        fh.write('{"key": "k3", "total_ns"')  # killed mid-append
+    j2 = RunJournal(path)
+    assert len(j2) == 2 and j2.get("k1")["total_ns"] == 1.0
+    assert "k3" not in j2
+    # later lines win on key collisions (re-append is harmless)
+    j2.record("k1", {"total_ns": 9.0})
+    assert RunJournal(path).get("k1")["total_ns"] == 9.0
+
+
+def test_point_key_content_identity():
+    sp = tiny_space()
+    d1, d2 = tiny_dcfg(), tiny_dcfg()
+    p = sp.default()
+    assert point_key(sp, p, d1) == point_key(sp, p, d2)
+    assert point_key(sp, p, d1) != point_key(sp, p, tiny_dcfg(seed=7))
+    q = sp.point(channels_per_layer=1, banks_per_channel=2,
+                 columns_per_bank=64)
+    assert point_key(sp, p, d1) != point_key(sp, q, d1)
+
+
+# ---------------------------------------------------------------------------
+# Explorers: determinism, journal reuse, stub-landscape behavior.
+# ---------------------------------------------------------------------------
+
+def _patched_run(dcfg, space, journal, monkeypatch):
+    """run_dse with the mapping search replaced by an analytic landscape
+    (bigger allocations are strictly faster), so explorer logic is
+    testable in milliseconds. Journal semantics stay real."""
+    import repro.dse.explore as ex
+
+    def fake_call(self, points):
+        out = []
+        for p in points:
+            k = point_key(self.space, p, self.dcfg)
+            hit = self.journal.get(k)
+            if hit is None:
+                d = p.as_dict()
+                total = 1e9 / (d["channels_per_layer"]
+                               * d["banks_per_channel"]
+                               * d["columns_per_bank"])
+                hit = self.journal.record(k, {
+                    "family": p.family, "point": d,
+                    "point_key": p.key(),
+                    "arch_name": self.space.build(p).name,
+                    "total_ns": total, "energy_pj": 1.0,
+                    **self.space.costs(p)})
+                self.n_evaluated += 1
+            else:
+                self.n_from_journal += 1
+            out.append(hit)
+        return out
+
+    monkeypatch.setattr(ex._Evaluator, "__call__", fake_call)
+    return ex.run_dse(dcfg, space=space, journal=journal)
+
+
+@pytest.mark.parametrize("explorer", ["grid", "random", "evolve"])
+def test_explorers_deterministic_and_resumable(explorer, monkeypatch):
+    sp = tiny_space()
+    dcfg = tiny_dcfg(explorer=explorer, budget=5, seed=3)
+    j = RunJournal()
+    r1 = _patched_run(dcfg, sp, j, monkeypatch)
+    keys1 = [r["point"] for r in r1.records]
+    assert len(r1.records) == 5
+    assert r1.records[0]["point"] == sp.default().as_dict()  # baseline 1st
+    assert len({json.dumps(k, sort_keys=True) for k in keys1}) == 5
+    # resume on the same journal: same proposals, zero evaluations
+    r2 = _patched_run(dcfg, sp, j, monkeypatch)
+    assert [r["point"] for r in r2.records] == keys1
+    # fresh journal, same seed: identical proposal sequence
+    r3 = _patched_run(dcfg, sp, RunJournal(), monkeypatch)
+    assert [r["point"] for r in r3.records] == keys1
+
+
+def test_evolve_converges_on_stub_landscape(monkeypatch):
+    """On a landscape where bigger allocations are strictly faster, the
+    evolutionary explorer must find the fastest valid config."""
+    sp = tiny_space()
+    dcfg = tiny_dcfg(explorer="evolve", budget=6, seed=1, population=3)
+    res = _patched_run(dcfg, sp, RunJournal(), monkeypatch)
+    best = min(res.records, key=lambda r: r["total_ns"])
+    # fastest valid point: 1ch x 4 banks x 128 cols or 2ch x 2 x 128
+    assert best["total_ns"] == pytest.approx(1e9 / (4 * 128))
+
+
+# ---------------------------------------------------------------------------
+# End-to-end on a real (tiny) search.
+# ---------------------------------------------------------------------------
+
+def test_run_dse_end_to_end_tiny(tmp_path, monkeypatch):
+    """Real mapping searches over a tiny space/net: the frontier is
+    non-trivial, records carry real objectives, and a journal re-run
+    performs zero new searches while reproducing every number."""
+    layers = [
+        LayerSpec("l0", K=8, C=4, P=8, Q=8, R=3, S=3, pad=1),
+        LayerSpec("l1", K=8, C=8, P=8, Q=8, R=3, S=3, pad=1),
+    ]
+    import repro.dse.explore as ex
+    monkeypatch.setattr(
+        ex, "describe",
+        lambda name: type("D", (), {"layers": layers,
+                                    "edges": chain_edges(layers)})())
+    sp = tiny_space()
+    path = str(tmp_path / "run.jsonl")
+    dcfg = tiny_dcfg(explorer="grid", budget=6, journal_path=path)
+    r1 = run_dse(dcfg, space=sp)
+    assert r1.stats["evaluated"] == 6
+    assert len(r1.frontier) >= 2
+    for rec in r1.records:
+        assert rec["total_ns"] > 0 and rec["energy_pj"] > 0
+        assert rec["area_mm2"] > 0 and rec["power_w"] > 0
+    r2 = run_dse(dcfg, space=sp)
+    assert r2.stats["evaluated"] == 0
+    assert r2.stats["from_journal"] == 6
+    assert [r["total_ns"] for r in r2.records] == \
+        [r["total_ns"] for r in r1.records]
+    # report rendering smoke
+    assert "frontier" in summarize(r2)
+    assert "latency_ms" in frontier_table(r2.frontier)
+
+
+def test_serial_evaluator_evicts_bundles(monkeypatch):
+    """Each arch point is scored once per sweep, so the shared engine
+    must not pin a cache bundle per point (memory stays bounded)."""
+    layers = [LayerSpec("l0", K=4, C=4, P=4, Q=4, R=3, S=3, pad=1)]
+    import repro.dse.explore as ex
+    monkeypatch.setattr(
+        ex, "describe",
+        lambda name: type("D", (), {"layers": layers,
+                                    "edges": chain_edges(layers)})())
+    sp = tiny_space()
+    ev = _Evaluator(sp, tiny_dcfg(), RunJournal())
+    ev(list(sp.enumerate()))
+    assert ev.n_evaluated == 6
+    assert ev.engine.n_arch_bundles == 0
+
+
+@pytest.mark.slow
+def test_pool_matches_serial_with_custom_space():
+    """workers>0 must score the caller's space — including a custom one
+    whose axes differ from the shipped family space — bit-identically to
+    serial mode (regression: workers once rebuilt the shipped space)."""
+    sp = ParamSpace(
+        family="dram_pim",
+        axes={
+            "channels_per_layer": (1, 2),
+            "banks_per_channel": (2,),
+            "columns_per_bank": (96, 160),  # off the shipped axes
+        },
+        defaults={"channels_per_layer": 2, "banks_per_channel": 2,
+                  "columns_per_bank": 96},
+    )
+    dcfg = dict(network="resnet18", mode="transform", explorer="grid",
+                budget=3, n_candidates=2, max_steps=128, seed=0)
+    serial = run_dse(DSEConfig(**dcfg, workers=0), space=sp)
+    pooled = run_dse(DSEConfig(**dcfg, workers=2), space=sp)
+    assert pooled.stats["evaluated"] == serial.stats["evaluated"] == 3
+    for a, b in zip(serial.records, pooled.records):
+        assert a["point"] == b["point"]
+        assert a["total_ns"] == b["total_ns"]
+        assert a["energy_pj"] == b["energy_pj"]
+        assert a["key"] == b["key"]
+
+
+def test_evaluate_point_matches_direct_search(monkeypatch):
+    """A DSE evaluation is exactly optimize_network on the built arch."""
+    from repro.core import SearchConfig, optimize_network
+    layers = [
+        LayerSpec("l0", K=4, C=4, P=4, Q=4, R=3, S=3, pad=1),
+        LayerSpec("l1", K=4, C=4, P=4, Q=4, R=3, S=3, pad=1),
+    ]
+    import repro.dse.explore as ex
+    monkeypatch.setattr(
+        ex, "describe",
+        lambda name: type("D", (), {"layers": layers,
+                                    "edges": chain_edges(layers)})())
+    sp = tiny_space()
+    dcfg = tiny_dcfg()
+    p = sp.default()
+    rec = evaluate_point(sp, p, dcfg)
+    ref = optimize_network(layers, chain_edges(layers), sp.build(p),
+                           dcfg.search_config())
+    assert rec["total_ns"] == ref.total_ns
