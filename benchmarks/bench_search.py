@@ -22,8 +22,8 @@ from __future__ import annotations
 import time
 
 from repro.core import (MODES, STRATEGIES, SearchConfig, describe,
-                        optimize_network)
-from repro.core.engine import OverlapEngine
+                        dram_pim, optimize_network, reram_pim, tpu_spatial)
+from repro.core.engine import OverlapEngine, optimize_network_engine
 from repro.core.search import _consumers_of, _score_forward, candidates
 
 from . import record
@@ -111,6 +111,55 @@ def e2e_speedup():
     yield _emit("bench_search.e2e_resnet18_transform_refine", t_eng * 1e6,
                   f"ref_s={t_ref:.2f};engine_s={t_eng:.2f}"
                   f";speedup={t_ref / t_eng:.2f}x;equal=True")
+
+
+def objective_frontier():
+    """Latency-vs-EDP frontier of the energy-aware transform search:
+    resnet18 on each arch factory, searched under every objective. Points
+    land in ``BENCH_search.json`` under ``frontier["resnet18/<arch>"]``;
+    the derived column reports whether the EDP-objective search strictly
+    dominates the latency-only search on EDP. A tie is the expected
+    common case at fixed arch (base energy is mapping-invariant, so EDP
+    ordering mostly tracks latency); the greedy per-layer search offers
+    no guarantee either way, so ``dominates`` is reported, not
+    asserted."""
+    desc = describe("resnet18")
+    n_cand = 8 if QUICK else N_CANDIDATES
+    max_steps = 2048 if QUICK else MAX_STEPS
+    factories = (("dram_pim", dram_pim()),
+                 ("reram_pim", reram_pim()),
+                 ("tpu_spatial", tpu_spatial()))
+    for arch_name, arch in factories:
+        eng = OverlapEngine()   # shared: objectives reuse the analysis
+        points = []
+        t0 = time.perf_counter()
+        for objective in ("latency", "energy", "edp"):
+            cfg = SearchConfig(n_candidates=n_cand, seed=SEED,
+                               max_steps=max_steps, mode="transform",
+                               objective=objective)
+            res = optimize_network_engine(desc.layers, desc.edges, arch,
+                                          cfg, engine=eng)
+            s = res.summary()
+            points.append({
+                "objective": objective,
+                "total_ns": s["total_ns"],
+                "energy_pj": s["energy_pj"],
+                "move_energy_pj": s["move_energy_pj"],
+                "moved_bytes": s["moved_bytes"],
+                "edp_ns_pj": s["edp_ns_pj"],
+            })
+        dt = time.perf_counter() - t0
+        record.update_frontier(f"resnet18/{arch_name}", points)
+        by_obj = {p["objective"]: p for p in points}
+        edp_lat = by_obj["latency"]["edp_ns_pj"]
+        edp_edp = by_obj["edp"]["edp_ns_pj"]
+        yield _emit(
+            f"bench_search.objective_frontier_resnet18_{arch_name}",
+            dt * 1e6,
+            f"edp_latency_search={edp_lat:.4e}"
+            f";edp_edp_search={edp_edp:.4e}"
+            f";edp_win={edp_lat / edp_edp:.4f}x"
+            f";dominates={edp_edp < edp_lat}")
 
 
 def search_wall():

@@ -10,7 +10,13 @@ Schema::
 
     {"schema": 1,
      "rows": {"<bench row name>": {"us_per_call": ..., "derived": ...}},
-     "dse": {"<family>/<network>/<mode>": {summary numbers}}}
+     "dse": {"<family>/<network>/<mode>[/<objective>]": {summary numbers}},
+     "frontier": {"<network>/<arch>": [{objective, total_ns, energy_pj,
+                                        move_energy_pj, edp_ns_pj}, ...]}}
+
+The ``frontier`` section holds the per-arch latency-vs-EDP trade of the
+energy-aware mapping search (one point per search objective), written by
+``bench_search.objective_frontier``.
 """
 from __future__ import annotations
 
@@ -31,10 +37,11 @@ def _load(path: str = BENCH_JSON) -> Dict:
                 data.setdefault("schema", 1)
                 data.setdefault("rows", {})
                 data.setdefault("dse", {})
+                data.setdefault("frontier", {})
                 return data
         except (json.JSONDecodeError, OSError):
             pass
-    return {"schema": 1, "rows": {}, "dse": {}}
+    return {"schema": 1, "rows": {}, "dse": {}, "frontier": {}}
 
 
 def _dump(data: Dict, path: str = BENCH_JSON) -> None:
@@ -49,6 +56,14 @@ def update_rows(rows: Dict[str, Dict], path: str = BENCH_JSON) -> None:
     """Merge ``{name: {"us_per_call": ..., "derived": ...}}`` rows."""
     data = _load(path)
     data["rows"].update(rows)
+    _dump(data, path)
+
+
+def update_frontier(key: str, points, path: str = BENCH_JSON) -> None:
+    """Replace the objective-frontier point list under ``frontier[key]``
+    (``key`` is ``<network>/<arch>``; one point per search objective)."""
+    data = _load(path)
+    data["frontier"][key] = points
     _dump(data, path)
 
 

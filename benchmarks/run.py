@@ -35,6 +35,7 @@ def bench_main() -> None:
         bench_search.scoring_throughput,
         bench_search.e2e_speedup,
         bench_search.search_wall,
+        bench_search.objective_frontier,
         paper_figs.fig4_motivation,
         paper_figs.fig10_overall,
         paper_figs.fig11_vs_overlapim,
@@ -71,7 +72,7 @@ def bench_main() -> None:
 
 def _dse_parser() -> argparse.ArgumentParser:
     from repro.dse import EXPLORERS, SPACES
-    from repro.core.search import MODES, STRATEGIES
+    from repro.core.search import MODES, OBJECTIVES, STRATEGIES
 
     p = argparse.ArgumentParser(
         prog="run.py dse",
@@ -82,6 +83,11 @@ def _dse_parser() -> argparse.ArgumentParser:
     p.add_argument("--family", default="dram_pim", choices=sorted(SPACES))
     p.add_argument("--mode", default="transform", choices=MODES)
     p.add_argument("--strategy", default="forward", choices=STRATEGIES)
+    p.add_argument("--objective", default="latency", choices=OBJECTIVES,
+                   help="mapping-search objective (energy/edp/blend make "
+                        "the sweep energy-aware)")
+    p.add_argument("--blend-alpha", type=float, default=0.5,
+                   help="energy weight of the 'blend' objective")
     p.add_argument("--explorer", default="evolve", choices=EXPLORERS)
     p.add_argument("--budget", type=int, default=64,
                    help="design points to propose (journal hits included)")
@@ -101,17 +107,31 @@ def dse_main(argv) -> None:
     args = _dse_parser().parse_args(argv)
     from benchmarks import record
     from repro.dse import (DSEConfig, best_arch_table, frontier_table,
-                           run_dse, summarize, sweep_networks)
+                           record_edp, run_dse, summarize, sweep_networks)
 
     # one journal-naming scheme for both branches; a literal --journal
-    # path has no {placeholders} and formats to itself
+    # path has no {placeholders} and formats to itself. Non-latency
+    # objectives journal separately (their records carry different
+    # chosen mappings and objective_value columns); blend is further
+    # tagged with its alpha so differently-weighted sweeps never share a
+    # journal file or a BENCH entry.
+    if args.objective == "latency":
+        obj_tag = ""
+    elif args.objective == "blend":
+        obj_tag = f"blend{args.blend_alpha:g}"
+    else:
+        obj_tag = args.objective
     journal_template = args.journal or os.path.join(
-        "dse_runs", args.family + "_{network}_{mode}.jsonl")
+        "dse_runs", args.family + "_{network}_{mode}"
+        + (f"_{obj_tag}" if obj_tag else "") + ".jsonl")
 
     def sweep_summary(res) -> dict:
         best = res.best_within_area() or res.baseline
+        best_edp = res.best_by("edp_ns_pj") or res.baseline
         return {
             "explorer": res.config.explorer,
+            "objective": res.config.objective,
+            "blend_alpha": res.config.blend_alpha,
             "budget": res.config.budget,
             "evaluated": res.stats["evaluated"],
             "from_journal": res.stats["from_journal"],
@@ -119,16 +139,44 @@ def dse_main(argv) -> None:
             "wall_s": round(res.stats["wall_s"], 2),
             "baseline_arch": res.baseline["arch_name"],
             "baseline_total_ns": res.baseline["total_ns"],
+            "baseline_energy_pj": res.baseline["energy_pj"],
+            "baseline_edp_ns_pj": record_edp(res.baseline),
             "best_iso_area_arch": best["arch_name"],
             "best_iso_area_total_ns": best["total_ns"],
             "best_iso_area_point": best["point"],
+            "best_edp_arch": best_edp["arch_name"],
+            "best_edp_ns_pj": record_edp(best_edp),
+            "best_edp_total_ns": best_edp["total_ns"],
+            "best_edp_energy_pj": best_edp["energy_pj"],
+            # True iff some frontier point beats the latency-only search
+            # on the default arch (the baseline) on EDP
+            "frontier_dominates_baseline_on_edp": any(
+                p.objectives[0] * p.objectives[1] < record_edp(res.baseline)
+                for p in res.frontier.points),
+            # the energy-aware frontier itself (latency/energy/area all
+            # minimized), so BENCH_search.json records the trade-off
+            "frontier_points": [
+                {"arch_name": (p.payload or {}).get("arch_name", p.key),
+                 "total_ns": p.objectives[0],
+                 "energy_pj": p.objectives[1],
+                 "area_mm2": p.objectives[2],
+                 "move_energy_pj": (p.payload or {}).get("move_energy_pj"),
+                 "edp_ns_pj": p.objectives[0] * p.objectives[1]}
+                for p in res.frontier.points],
         }
 
     base = DSEConfig(
         family=args.family, mode=args.mode, strategy=args.strategy,
         explorer=args.explorer, budget=args.budget, seed=args.seed,
         n_candidates=args.candidates, max_steps=args.max_steps,
+        objective=args.objective, blend_alpha=args.blend_alpha,
         workers=args.workers)
+
+    # dse-journal key: objective-suffixed for non-latency sweeps so the
+    # pre-energy entries keep tracking the latency trajectory
+    def dse_key(net, mode) -> str:
+        return f"{args.family}/{net}/{mode}" + (
+            f"/{obj_tag}" if obj_tag else "")
 
     if args.network == "all":
         base = dataclasses.replace(base, journal_path=journal_template)
@@ -138,8 +186,7 @@ def dse_main(argv) -> None:
             print(summarize(res))
             print(frontier_table(res.frontier))
             print()
-            record.update_dse(f"{args.family}/{net}/{mode}",
-                              sweep_summary(res))
+            record.update_dse(dse_key(net, mode), sweep_summary(res))
         print(best_arch_table(results))
         return
 
@@ -151,7 +198,7 @@ def dse_main(argv) -> None:
     print(summarize(res))
     print(frontier_table(res.frontier))
     print(f"dse: journal={cfg.journal_path} entries={_journal_len(cfg)}")
-    record.update_dse(f"{args.family}/{args.network}/{args.mode}",
+    record.update_dse(dse_key(args.network, args.mode),
                       sweep_summary(res))
 
 

@@ -12,9 +12,10 @@ from .overlap import (CoordMap, Edge, HeadFoldMap, HeadUnfoldMap,
                       ready_steps_analytical, ready_steps_exhaustive,
                       schedule_with_ready, stream_tail_fraction)
 from .perf_model import (LayerPerf, PerfCache, analyze, arch_area_proxy,
-                         arch_power_proxy, step_latency_ns)
-from .search import (MODES, STRATEGIES, LayerResult, NetworkResult,
-                     SearchConfig, evaluate_chain, optimize_network)
+                         arch_power_proxy, move_energy_pj, step_latency_ns)
+from .search import (MODES, OBJECTIVES, STRATEGIES, LayerResult,
+                     NetworkResult, SearchConfig, combine_objective,
+                     evaluate_chain, optimize_network)
 from .transform import TransformResult, transform_schedule
 from .workload import (DIMS, OUTPUT_DIMS, REDUCTION_DIMS, LayerSpec,
                        bert_encoder, conv, get_network, matmul, resnet18,

@@ -59,8 +59,9 @@ from .overlap import (Edge, IdentityMap, CoordMap, digit_scan,
                       overlapped_end, rect_loop_groups, schedule_with_ready,
                       stream_tail_fraction)
 from .perf_model import LayerPerf, PerfCache
-from .search import (LayerResult, NetworkResult, SearchConfig, _consumers_of,
-                     _visit_order, candidates)
+from .search import (LayerResult, NetworkResult, SearchConfig,
+                     _consumers_of, _visit_order, candidates,
+                     combine_objective)
 from .transform import transform_schedule
 from .workload import LayerSpec, OUTPUT_DIMS
 
@@ -440,11 +441,15 @@ class OverlapEngine:
         start = float(ready.min()) if ready.size else 0.0
         if mode == "transform" and edges[i]:
             tr = transform_schedule(ready, perf.step_ns, perf.tile_move_ns,
-                                    order=order)
+                                    order=order,
+                                    tile_bytes=perf.tile_bytes,
+                                    move_pj_per_byte=perf.move_pj_per_byte)
             return LayerResult(m, perf, start,
                                tr.end_ns + perf.output_move_ns,
                                tr.finish_ns, transformed=True,
-                               moved_frac=tr.moved_frac)
+                               moved_frac=tr.moved_frac,
+                               moved_bytes=tr.moved_bytes,
+                               move_energy_pj=tr.move_energy_pj)
         fin = schedule_with_ready(ready, perf.step_ns)
         return LayerResult(m, perf, start,
                            float(fin[:, -1].max()) + perf.output_move_ns,
@@ -492,7 +497,9 @@ class OverlapEngine:
     def score_forward_batch(self, i: int, cands: Sequence[Mapping],
                             edges: Sequence[Sequence[Edge]],
                             done: Dict[int, LayerResult], mode: str,
-                            has_consumer: bool = True) -> np.ndarray:
+                            has_consumer: bool = True,
+                            objective: str = "latency",
+                            blend_alpha: float = 0.5) -> np.ndarray:
         """Vector of ``search._score_forward`` values for all candidates;
         ready steps for each edge are computed in one batched pass."""
         if cands:
@@ -500,21 +507,24 @@ class OverlapEngine:
         if mode == "original":
             base = max((done[e.producer].end_ns for e in edges[i]),
                        default=0.0)
-            return np.array([base + self.perf(m).sequential_ns
-                             for m in cands])
+            return np.array([combine_objective(
+                objective, base + self.perf(m).sequential_ns,
+                self.perf(m).energy_pj, blend_alpha) for m in cands])
         if edges[i]:
             for e in edges[i]:
                 self.ready_steps_batch(done[e.producer].mapping, cands,
                                        e.cmap)
         # score memo: a candidate's forward score is a pure function of
-        # (mode, candidate, committed producer results, has_consumer) —
-        # refine passes and repeated strategy sweeps re-score identical
-        # contexts, which the reference path recomputes from scratch
+        # (mode, objective, candidate, committed producer results,
+        # has_consumer) — refine passes and repeated strategy sweeps
+        # re-score identical contexts, which the reference path recomputes
+        # from scratch
         prods = tuple(done[e.producer] for e in edges[i])
         pids = tuple(id(p) for p in prods)
         out = np.empty(len(cands), dtype=np.float64)
         for k, m in enumerate(cands):
-            skey = (mode, m.cache_key, has_consumer, pids)
+            skey = (mode, objective, blend_alpha, m.cache_key,
+                    has_consumer, pids)
             hit = self._cur.score.get(skey)
             if hit is not None and all(a is b for a, b in zip(hit[0],
                                                               prods)):
@@ -524,31 +534,45 @@ class OverlapEngine:
             tail = self.tail(m) if has_consumer else 0.0
             penalty = tail * perf.compute_ns
             if not edges[i]:
-                out[k] = perf.sequential_ns + penalty
+                out[k] = combine_objective(
+                    objective, perf.sequential_ns + penalty,
+                    perf.energy_pj, blend_alpha)
             else:
                 ready, order = self.ready_matrix_order(m, edges[i], done)
                 if mode == "transform":
-                    tr = transform_schedule(ready, perf.step_ns,
-                                            perf.tile_move_ns, order=order)
-                    out[k] = tr.end_ns + perf.output_move_ns + penalty
+                    tr = transform_schedule(
+                        ready, perf.step_ns, perf.tile_move_ns,
+                        order=order, tile_bytes=perf.tile_bytes,
+                        move_pj_per_byte=perf.move_pj_per_byte)
+                    out[k] = combine_objective(
+                        objective,
+                        tr.end_ns + perf.output_move_ns + penalty,
+                        perf.energy_pj + tr.move_energy_pj, blend_alpha)
                 else:
-                    out[k] = overlapped_end(ready, perf.step_ns) \
-                        + perf.output_move_ns + penalty
+                    out[k] = combine_objective(
+                        objective,
+                        overlapped_end(ready, perf.step_ns)
+                        + perf.output_move_ns + penalty,
+                        perf.energy_pj, blend_alpha)
             self._cur.score[skey] = (prods, out[k])
         return out
 
     def score_backward(self, i: int, m: Mapping,
                        edges: Sequence[Sequence[Edge]],
-                       fixed: Dict[int, Mapping], mode: str) -> float:
+                       fixed: Dict[int, Mapping], mode: str,
+                       objective: str = "latency",
+                       blend_alpha: float = 0.5) -> float:
         """``search._score_backward`` with memoized analysis: the consumer
         tile projection is shared across all producer candidates, so each
         candidate only pays its own digit scan. The full score is memoized
-        on (mode, candidate, fixed consumer mappings) — a pure function."""
+        on (mode, objective, candidate, fixed consumer mappings) — a pure
+        function."""
         self._check_arch(m)
         cons_key = tuple(sorted((j, fixed[j].cache_key)
                                 for j in _consumers_of(edges, i)
                                 if j in fixed))
-        skey = ("bw", mode, i, m.cache_key, cons_key)
+        skey = ("bw", mode, objective, blend_alpha, i, m.cache_key,
+                cons_key)
         hit = self._cur.score.get(skey)
         if hit is not None:
             return hit[1]
@@ -559,8 +583,10 @@ class OverlapEngine:
                             (m.n_banks, m.n_steps)).copy())}
         cons = [j for j in _consumers_of(edges, i) if j in fixed]
         if mode == "original" or not cons:
-            self._cur.score[skey] = (None, perf.sequential_ns)
-            return perf.sequential_ns
+            seq = combine_objective(objective, perf.sequential_ns,
+                                    perf.energy_pj, blend_alpha)
+            self._cur.score[skey] = (None, seq)
+            return seq
         worst = 0.0
         for j in cons:
             mc = fixed[j]
@@ -568,10 +594,17 @@ class OverlapEngine:
             es = [e for e in edges[j] if e.producer == i]
             ready = self.ready_matrix(mc, es, done)
             if mode == "transform":
-                worst = max(worst, transform_schedule(
-                    ready, pc.step_ns, pc.tile_move_ns).end_ns)
+                tr = transform_schedule(ready, pc.step_ns, pc.tile_move_ns,
+                                        tile_bytes=pc.tile_bytes,
+                                        move_pj_per_byte=pc.move_pj_per_byte)
+                sc = combine_objective(objective, tr.end_ns,
+                                       pc.energy_pj + tr.move_energy_pj,
+                                       blend_alpha)
             else:
-                worst = max(worst, overlapped_end(ready, pc.step_ns))
+                sc = combine_objective(objective,
+                                       overlapped_end(ready, pc.step_ns),
+                                       pc.energy_pj, blend_alpha)
+            worst = max(worst, sc)
         self._cur.score[skey] = (None, worst)
         return worst
 
@@ -595,16 +628,22 @@ def optimize_network_engine(layers: Sequence[LayerSpec],
         cands = candidates(layers[i], arch, cfg, salt=i)
         if i in backward_part:
             scores = np.array([eng.score_backward(i, m, edges, chosen,
-                                                  cfg.mode) for m in cands])
+                                                  cfg.mode, cfg.objective,
+                                                  cfg.blend_alpha)
+                               for m in cands])
         else:
             avail = all(e.producer in done for e in edges[i])
             has_cons = bool(_consumers_of(edges, i))
             if avail:
                 scores = eng.score_forward_batch(i, cands, edges, done,
-                                                 cfg.mode, has_cons)
+                                                 cfg.mode, has_cons,
+                                                 cfg.objective,
+                                                 cfg.blend_alpha)
             else:
-                scores = np.array([eng.perf(m).sequential_ns
-                                   for m in cands])
+                perfs = [eng.perf(m) for m in cands]
+                scores = np.array([combine_objective(
+                    cfg.objective, p.sequential_ns, p.energy_pj,
+                    cfg.blend_alpha) for p in perfs])
         # np.argmin == first minimum == min(cands, key=...) tie-breaking
         chosen[i] = cands[int(np.argmin(scores))]
         if all(e.producer in done for e in edges[i]):
@@ -622,14 +661,16 @@ def optimize_network_engine(layers: Sequence[LayerSpec],
                 cfg, n_candidates=cfg.refine_candidates)
             cands = candidates(layers[i], arch, rcfg, salt=i + 7919)
             cands.append(chosen[i])
-            best_m, best_t = chosen[i], result.total_ns
+            best_m = chosen[i]
+            best_t = result.objective_value(cfg.objective, cfg.blend_alpha)
             for m in cands:
                 trial_maps = list(cur_maps)
                 trial_maps[i] = m
                 r = eng.evaluate_chain(trial_maps, edges, cfg.mode,
                                        reuse=(cur_res.layers, cur_maps))
-                if r.total_ns < best_t - 1e-9:
-                    best_m, best_t = m, r.total_ns
+                sc = r.objective_value(cfg.objective, cfg.blend_alpha)
+                if sc < best_t - 1e-9:
+                    best_m, best_t = m, sc
             if best_m is not chosen[i]:
                 chosen[i] = best_m
                 new_maps = [chosen[j] for j in range(n)]
@@ -642,4 +683,5 @@ def optimize_network_engine(layers: Sequence[LayerSpec],
                                     reuse=(cur_res.layers, cur_maps))
         if not improved:
             break
+    result.objective = cfg.objective
     return result

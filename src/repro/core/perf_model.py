@@ -21,7 +21,14 @@ from .workload import OUTPUT_DIMS, REDUCTION_DIMS
 
 @dataclasses.dataclass(frozen=True)
 class LayerPerf:
-    """Latency/energy decomposition of one mapping (no overlap)."""
+    """Latency/energy decomposition of one mapping (no overlap).
+
+    ``energy_pj`` is the mapping-invariant base energy
+    (``compute_energy_pj + io_energy_pj``); the mapping-*dependent*
+    movement energy of transform-relocated tiles lives on the schedule
+    result (``TransformResult.move_energy_pj`` / ``LayerResult``), fed by
+    ``tile_bytes`` and ``move_pj_per_byte`` here (DESIGN.md Section 9).
+    """
 
     step_ns: float          # latency of one bank time step
     n_steps: int
@@ -30,7 +37,11 @@ class LayerPerf:
     output_move_ns: float   # write outputs to next layer's input region
     tile_move_ns: float     # movement of a single (bank, step) output tile
     sequential_ns: float    # compute + output movement
-    energy_pj: float
+    energy_pj: float        # compute_energy_pj + io_energy_pj
+    compute_energy_pj: float = 0.0  # bit-serial AAP MACs
+    io_energy_pj: float = 0.0       # output write-out through the links
+    tile_bytes: float = 0.0         # footprint of one (bank, step) tile
+    move_pj_per_byte: float = 0.0   # link energy per relocated byte
 
     @property
     def total_ns(self) -> float:
@@ -74,6 +85,15 @@ def step_latency_ns(mapping: Mapping) -> float:
     return macs_per_col * (mac_ns + 2 * t_rw) + red_ns
 
 
+def move_energy_pj(arch: ArchSpec, n_bytes: float) -> float:
+    """Link energy of moving ``n_bytes`` between banks (pJ).
+
+    Same per-bit IO energy the base model charges for inter-layer output
+    movement (Table I ``e_io``), so transform-relocation energy and
+    output-write energy are on one scale."""
+    return n_bytes * 8 * arch.timing.e_io
+
+
 def analyze(mapping: Mapping) -> LayerPerf:
     arch = mapping.arch
     layer = mapping.layer
@@ -97,18 +117,24 @@ def analyze(mapping: Mapping) -> LayerPerf:
     for d in OUTPUT_DIMS:
         tile_out *= ext[d]
     tile_move_ns = tile_out * arch.word_bytes / write_bw
+    tile_bytes = tile_out * arch.word_bytes
 
     # energy: AAP-dominated bit-serial compute + IO for the movement
     n = arch.word_bits
     e_add = (4 * n + 1) * arch.timing.e_act
     e_mac = (n + 1) * e_add  # mul = n serial adds, + 1 accumulate add
-    energy = layer.macs * e_mac + out_bytes * 8 * arch.timing.e_io
+    compute_energy = layer.macs * e_mac
+    io_energy = out_bytes * 8 * arch.timing.e_io
 
     return LayerPerf(
         step_ns=step_ns, n_steps=n_steps, n_banks=n_banks,
         compute_ns=compute_ns, output_move_ns=output_move_ns,
         tile_move_ns=tile_move_ns,
-        sequential_ns=compute_ns + output_move_ns, energy_pj=energy)
+        sequential_ns=compute_ns + output_move_ns,
+        energy_pj=compute_energy + io_energy,
+        compute_energy_pj=compute_energy, io_energy_pj=io_energy,
+        tile_bytes=tile_bytes,
+        move_pj_per_byte=move_energy_pj(arch, 1.0))
 
 
 # ---------------------------------------------------------------------------

@@ -31,6 +31,31 @@ from .workload import LayerSpec
 
 MODES = ("original", "overlap", "transform")
 STRATEGIES = ("forward", "backward", "middle_output", "middle_overall")
+# energy-aware objectives (DESIGN.md Section 9): "latency" is the paper's
+# objective; "energy" minimizes base + transform-movement energy; "edp" the
+# energy-delay product; "blend" a weighted geometric mean of the two.
+OBJECTIVES = ("latency", "energy", "edp", "blend")
+
+
+def combine_objective(objective: str, latency_ns: float, energy_pj: float,
+                      blend_alpha: float = 0.5) -> float:
+    """Scalarize one (latency, energy) pair under a named objective.
+
+    Used identically for candidate scores and whole-network refine
+    comparisons, on both the engine and reference paths — any asymmetry
+    would break the engine's bit-identity contract. ``blend`` is the
+    weighted geometric mean ``latency^(1-a) * energy^a`` (scale-free, so
+    the ns/pJ unit mismatch cannot silently weight one term)."""
+    if objective == "latency":
+        return latency_ns
+    if objective == "energy":
+        return energy_pj
+    if objective == "edp":
+        return latency_ns * energy_pj
+    if objective == "blend":
+        a = blend_alpha
+        return latency_ns ** (1.0 - a) * energy_pj ** a
+    raise ValueError(f"unknown objective {objective!r}")
 
 
 @dataclasses.dataclass
@@ -48,10 +73,16 @@ class SearchConfig:
     # batched/memoizing engine (core.engine); False = per-candidate
     # reference path, kept as the differential-test oracle
     use_engine: bool = True
+    # scoring objective ("latency" reproduces the paper exactly);
+    # blend_alpha is the energy weight of the "blend" objective
+    objective: str = "latency"
+    blend_alpha: float = 0.5
 
     def __post_init__(self):
         assert self.mode in MODES, self.mode
         assert self.strategy in STRATEGIES, self.strategy
+        assert self.objective in OBJECTIVES, self.objective
+        assert 0.0 <= self.blend_alpha <= 1.0, self.blend_alpha
 
 
 @dataclasses.dataclass
@@ -63,10 +94,17 @@ class LayerResult:
     finish_ns: np.ndarray          # (nb, nt) absolute space finish times
     transformed: bool = False
     moved_frac: float = 0.0
+    moved_bytes: float = 0.0       # data relocated by the transformation
+    move_energy_pj: float = 0.0
 
     @property
     def latency_ns(self) -> float:
         return self.end_ns - self.start_ns
+
+    @property
+    def energy_pj(self) -> float:
+        """Full layer energy: mapping-invariant base + movement."""
+        return self.perf.energy_pj + self.move_energy_pj
 
 
 @dataclasses.dataclass
@@ -75,11 +113,34 @@ class NetworkResult:
     total_ns: float
     mode: str
     per_layer_ns: List[float] = dataclasses.field(default_factory=list)
+    objective: str = "latency"     # objective the search optimized
+
+    @property
+    def total_energy_pj(self) -> float:
+        return sum(l.energy_pj for l in self.layers)
+
+    def objective_value(self, objective: Optional[str] = None,
+                        blend_alpha: float = 0.5) -> float:
+        """The network-level scalar the refine loop compares."""
+        return combine_objective(objective or self.objective,
+                                 self.total_ns, self.total_energy_pj,
+                                 blend_alpha)
 
     def summary(self) -> Dict[str, float]:
+        compute = sum(l.perf.compute_energy_pj for l in self.layers)
+        io = sum(l.perf.io_energy_pj for l in self.layers)
+        move = sum(l.move_energy_pj for l in self.layers)
+        energy = self.total_energy_pj
         return {"total_ns": self.total_ns,
                 "n_layers": len(self.layers),
-                "mode": self.mode}
+                "mode": self.mode,
+                "objective": self.objective,
+                "energy_pj": energy,
+                "compute_energy_pj": compute,
+                "io_energy_pj": io,
+                "move_energy_pj": move,
+                "moved_bytes": sum(l.moved_bytes for l in self.layers),
+                "edp_ns_pj": self.total_ns * energy}
 
 
 # ---------------------------------------------------------------------------
@@ -125,13 +186,17 @@ def evaluate_chain(mappings: Sequence[Mapping],
             ready = _ready_matrix(i, m, edges[i], done)
             start = float(ready.min()) if ready.size else 0.0
             if mode == "transform" and edges[i]:
-                tr = transform_schedule(ready, perf.step_ns,
-                                        perf.tile_move_ns)
+                tr = transform_schedule(
+                    ready, perf.step_ns, perf.tile_move_ns,
+                    tile_bytes=perf.tile_bytes,
+                    move_pj_per_byte=perf.move_pj_per_byte)
                 fin = tr.finish_ns
                 end = tr.end_ns + perf.output_move_ns
                 res = LayerResult(m, perf, start, end, fin,
                                   transformed=True,
-                                  moved_frac=tr.moved_frac)
+                                  moved_frac=tr.moved_frac,
+                                  moved_bytes=tr.moved_bytes,
+                                  move_energy_pj=tr.move_energy_pj)
             else:
                 fin = schedule_with_ready(ready, perf.step_ns)
                 end = float(fin[:, -1].max()) + perf.output_move_ns
@@ -160,23 +225,32 @@ def candidates(layer: LayerSpec, arch: ArchSpec,
     return out
 
 
-def _score_forward(i, m, edges, done, mode, has_consumer=True) -> float:
+def _score_forward(i, m, edges, done, mode, has_consumer=True,
+                   objective="latency", blend_alpha=0.5) -> float:
     perf = analyze(m)
     if mode == "original":
         base = max((done[e.producer].end_ns for e in edges[i]), default=0.0)
-        return base + perf.sequential_ns
+        return combine_objective(objective, base + perf.sequential_ns,
+                                 perf.energy_pj, blend_alpha)
     # successor-friendliness: penalize production orders whose outputs all
     # complete at the end (they deny the next layer any overlap)
     tail = stream_tail_fraction(m) if has_consumer else 0.0
     penalty = tail * perf.compute_ns
     if not edges[i]:
-        return perf.sequential_ns + penalty
+        return combine_objective(objective, perf.sequential_ns + penalty,
+                                 perf.energy_pj, blend_alpha)
     ready = _ready_matrix(i, m, edges[i], done)
     if mode == "transform":
-        tr = transform_schedule(ready, perf.step_ns, perf.tile_move_ns)
-        return tr.end_ns + perf.output_move_ns + penalty
-    return overlapped_end(ready, perf.step_ns) + perf.output_move_ns \
-        + penalty
+        tr = transform_schedule(ready, perf.step_ns, perf.tile_move_ns,
+                                tile_bytes=perf.tile_bytes,
+                                move_pj_per_byte=perf.move_pj_per_byte)
+        return combine_objective(
+            objective, tr.end_ns + perf.output_move_ns + penalty,
+            perf.energy_pj + tr.move_energy_pj, blend_alpha)
+    return combine_objective(
+        objective,
+        overlapped_end(ready, perf.step_ns) + perf.output_move_ns + penalty,
+        perf.energy_pj, blend_alpha)
 
 
 def _commit(i, m, edges, done, mode) -> LayerResult:
@@ -193,10 +267,14 @@ def _commit(i, m, edges, done, mode) -> LayerResult:
     ready = _ready_matrix(i, m, edges[i], done)
     start = float(ready.min())
     if mode == "transform":
-        tr = transform_schedule(ready, perf.step_ns, perf.tile_move_ns)
+        tr = transform_schedule(ready, perf.step_ns, perf.tile_move_ns,
+                                tile_bytes=perf.tile_bytes,
+                                move_pj_per_byte=perf.move_pj_per_byte)
         return LayerResult(m, perf, start, tr.end_ns + perf.output_move_ns,
                            tr.finish_ns, transformed=True,
-                           moved_frac=tr.moved_frac)
+                           moved_frac=tr.moved_frac,
+                           moved_bytes=tr.moved_bytes,
+                           move_energy_pj=tr.move_energy_pj)
     fin = schedule_with_ready(ready, perf.step_ns)
     return LayerResult(m, perf, start,
                        float(fin[:, -1].max()) + perf.output_move_ns, fin)
@@ -207,9 +285,11 @@ def _consumers_of(edges: Sequence[Sequence[Edge]], i: int) -> List[int]:
             if any(e.producer == i for e in es)]
 
 
-def _score_backward(i, m, edges, fixed: Dict[int, Mapping], mode) -> float:
-    """Score a producer candidate by the end time of its (fixed-mapping)
-    consumers, assuming the producer starts stall-free at t=0."""
+def _score_backward(i, m, edges, fixed: Dict[int, Mapping], mode,
+                    objective="latency", blend_alpha=0.5) -> float:
+    """Score a producer candidate by the end time (scalarized under the
+    objective) of its (fixed-mapping) consumers, assuming the producer
+    starts stall-free at t=0."""
     perf = analyze(m)
     done = {i: LayerResult(
         m, perf, 0.0, perf.sequential_ns,
@@ -217,7 +297,8 @@ def _score_backward(i, m, edges, fixed: Dict[int, Mapping], mode) -> float:
                         (m.n_banks, m.n_steps)).copy())}
     cons = [j for j in _consumers_of(edges, i) if j in fixed]
     if mode == "original" or not cons:
-        return perf.sequential_ns
+        return combine_objective(objective, perf.sequential_ns,
+                                 perf.energy_pj, blend_alpha)
     worst = 0.0
     for j in cons:
         mc = fixed[j]
@@ -225,10 +306,17 @@ def _score_backward(i, m, edges, fixed: Dict[int, Mapping], mode) -> float:
         es = [e for e in edges[j] if e.producer == i]
         ready = _ready_matrix(j, mc, es, done)
         if mode == "transform":
-            worst = max(worst, transform_schedule(
-                ready, pc.step_ns, pc.tile_move_ns).end_ns)
+            tr = transform_schedule(ready, pc.step_ns, pc.tile_move_ns,
+                                    tile_bytes=pc.tile_bytes,
+                                    move_pj_per_byte=pc.move_pj_per_byte)
+            sc = combine_objective(objective, tr.end_ns,
+                                   pc.energy_pj + tr.move_energy_pj,
+                                   blend_alpha)
         else:
-            worst = max(worst, overlapped_end(ready, pc.step_ns))
+            sc = combine_objective(objective,
+                                   overlapped_end(ready, pc.step_ns),
+                                   pc.energy_pj, blend_alpha)
+        worst = max(worst, sc)
     return worst
 
 
@@ -258,7 +346,9 @@ def _optimize_network_reference(layers: Sequence[LayerSpec],
         if i in backward_part:
             best = min(cands,
                        key=lambda m: _score_backward(i, m, edges, chosen,
-                                                     cfg.mode))
+                                                     cfg.mode,
+                                                     cfg.objective,
+                                                     cfg.blend_alpha))
         else:
             # forward scoring needs producers committed; producers missing
             # (backward half not yet visited) fall back to sequential score
@@ -266,9 +356,15 @@ def _optimize_network_reference(layers: Sequence[LayerSpec],
             has_cons = bool(_consumers_of(edges, i))
             if avail:
                 best = min(cands, key=lambda m: _score_forward(
-                    i, m, edges, done, cfg.mode, has_cons))
+                    i, m, edges, done, cfg.mode, has_cons,
+                    cfg.objective, cfg.blend_alpha))
             else:
-                best = min(cands, key=lambda m: analyze(m).sequential_ns)
+                def _seq_score(m):
+                    p = analyze(m)
+                    return combine_objective(cfg.objective,
+                                             p.sequential_ns, p.energy_pj,
+                                             cfg.blend_alpha)
+                best = min(cands, key=_seq_score)
         chosen[i] = best
         if all(e.producer in done for e in edges[i]):
             done[i] = _commit(i, best, edges, done, cfg.mode)
@@ -284,14 +380,16 @@ def _optimize_network_reference(layers: Sequence[LayerSpec],
                 cfg, n_candidates=cfg.refine_candidates)
             cands = candidates(layers[i], arch, rcfg, salt=i + 7919)
             cands.append(chosen[i])
-            best_m, best_t = chosen[i], result.total_ns
+            best_m = chosen[i]
+            best_t = result.objective_value(cfg.objective, cfg.blend_alpha)
             for m in cands:
                 trial = chosen.copy()
                 trial[i] = m
                 r = evaluate_chain([trial[j] for j in range(n)], edges,
                                    cfg.mode)
-                if r.total_ns < best_t - 1e-9:
-                    best_m, best_t = m, r.total_ns
+                sc = r.objective_value(cfg.objective, cfg.blend_alpha)
+                if sc < best_t - 1e-9:
+                    best_m, best_t = m, sc
             if best_m is not chosen[i]:
                 chosen[i] = best_m
                 improved = True
@@ -299,6 +397,7 @@ def _optimize_network_reference(layers: Sequence[LayerSpec],
                                 cfg.mode)
         if not improved:
             break
+    result.objective = cfg.objective
     return result
 
 

@@ -6,7 +6,7 @@ jointly with overlap-driven mapping search: the NicePIM/PIMSYN-style
 overlap analysis. See DESIGN.md Section 8.
 """
 from .explore import (DSEConfig, DSEResult, EXPLORERS, evaluate_point,
-                      network_energy_pj, point_key, run_dse)
+                      network_energy_pj, point_key, record_edp, run_dse)
 from .pareto import (DEFAULT_OBJECTIVES, FrontierPoint, ParetoFrontier,
                      dominates)
 from .persist import RunJournal, content_key

@@ -34,7 +34,8 @@ from ..core.arch import ArchSpec
 from ..core.engine import OverlapEngine, optimize_network_engine
 from ..core.perf_model import arch_area_proxy, arch_power_proxy
 from ..core.interface import describe
-from ..core.search import MODES, STRATEGIES, NetworkResult, SearchConfig
+from ..core.search import (MODES, OBJECTIVES, STRATEGIES, NetworkResult,
+                           SearchConfig, combine_objective)
 from .pareto import ParetoFrontier
 from .persist import RunJournal, content_key
 from .space import DesignPoint, ParamSpace, get_space
@@ -59,6 +60,11 @@ class DSEConfig:
     n_candidates: int = 8
     max_steps: int = 2048
     refine_passes: int = 0
+    # mapping-search objective (core.search.OBJECTIVES); non-latency
+    # objectives get distinct journal keys and drive the evolutionary
+    # explorer's fitness through the record's ``objective_value``
+    objective: str = "latency"
+    blend_alpha: float = 0.5
     # evolutionary knobs
     population: int = 8
     mutation_rate: float = 0.5
@@ -70,6 +76,9 @@ class DSEConfig:
         assert self.mode in MODES, self.mode
         assert self.strategy in STRATEGIES, self.strategy
         assert self.explorer in EXPLORERS, self.explorer
+        assert self.objective in OBJECTIVES, self.objective
+        assert 0.0 <= self.blend_alpha <= 1.0, \
+            f"blend_alpha must be in [0, 1], got {self.blend_alpha}"
         assert self.budget >= 1, "budget must be >= 1"
 
     def search_config(self) -> SearchConfig:
@@ -77,7 +86,14 @@ class DSEConfig:
                             max_steps=self.max_steps, mode=self.mode,
                             strategy=self.strategy,
                             refine_passes=self.refine_passes,
-                            use_engine=True)
+                            use_engine=True, objective=self.objective,
+                            blend_alpha=self.blend_alpha)
+
+    def objective_token(self) -> str:
+        """Journal-key token: "blend" depends on its alpha too."""
+        if self.objective == "blend":
+            return f"blend:{self.blend_alpha!r}"
+        return self.objective
 
 
 @dataclasses.dataclass
@@ -96,6 +112,15 @@ class DSEResult:
         eligible = [r for r in self.records if r["area_mm2"] <= cap + 1e-12]
         return min(eligible, key=lambda r: r["total_ns"], default=None)
 
+    def best_by(self, metric: str = "edp_ns_pj") -> Optional[Dict]:
+        """Record minimizing one recorded metric. ``edp_ns_pj`` tolerates
+        pre-energy journal records (``record_edp``)."""
+        def val(r: Dict) -> float:
+            if metric == "edp_ns_pj":
+                return record_edp(r)
+            return r[metric]
+        return min(self.records, key=val, default=None)
+
 
 # ---------------------------------------------------------------------------
 # Point evaluation (one full mapping search).
@@ -107,7 +132,8 @@ def key_for(dcfg: DSEConfig, arch_key: str) -> str:
     silently serve stale scores for changed evaluations."""
     return content_key(dcfg.network, dcfg.mode, dcfg.strategy, dcfg.seed,
                        dcfg.n_candidates, dcfg.max_steps,
-                       dcfg.refine_passes, arch_key)
+                       dcfg.refine_passes, arch_key,
+                       objective=dcfg.objective_token())
 
 
 def point_key(space: ParamSpace, point: DesignPoint,
@@ -115,8 +141,19 @@ def point_key(space: ParamSpace, point: DesignPoint,
     return key_for(dcfg, space.build(point).to_key())
 
 
+def record_edp(rec: Dict) -> float:
+    """THE energy-delay product of an evaluation record — every report
+    and BENCH entry goes through here. Pre-energy journal records lack
+    the ``edp_ns_pj`` column; it is recomputed from what they do carry."""
+    if "edp_ns_pj" in rec:
+        return rec["edp_ns_pj"]
+    return rec["total_ns"] * rec["energy_pj"]
+
+
 def network_energy_pj(result: NetworkResult) -> float:
-    return float(sum(l.perf.energy_pj for l in result.layers))
+    """Mapping-level network energy: base (compute + IO) plus the
+    movement energy of transform-relocated tiles."""
+    return float(sum(l.energy_pj for l in result.layers))
 
 
 def _search_arch(arch, dcfg: DSEConfig,
@@ -126,9 +163,14 @@ def _search_arch(arch, dcfg: DSEConfig,
     t0 = time.perf_counter()
     res = optimize_network_engine(desc.layers, desc.edges, arch,
                                   dcfg.search_config(), engine=engine)
+    total_ns = float(res.total_ns)
+    energy = network_energy_pj(res)
     return {
-        "total_ns": float(res.total_ns),
-        "energy_pj": network_energy_pj(res),
+        "total_ns": total_ns,
+        "energy_pj": energy,
+        "move_energy_pj": float(sum(l.move_energy_pj
+                                    for l in res.layers)),
+        "edp_ns_pj": total_ns * energy,
         "n_layers": len(res.layers),
         "wall_s": time.perf_counter() - t0,
     }
@@ -149,6 +191,10 @@ def _make_record(point: DesignPoint, dcfg: DSEConfig,
         "seed": dcfg.seed,
         "n_candidates": dcfg.n_candidates,
         "max_steps": dcfg.max_steps,
+        "objective": dcfg.objective,
+        "objective_value": combine_objective(
+            dcfg.objective, search_fields["total_ns"],
+            search_fields["energy_pj"], dcfg.blend_alpha),
         "area_mm2": costs["area_mm2"],
         "power_w": costs["power_w"],
         **search_fields,
@@ -339,9 +385,12 @@ def _run_evolve(space: ParamSpace, dcfg: DSEConfig, ev: _Evaluator,
     front_keys = frontier.key_set()   # refreshed once per generation
 
     def fitness(entry: Tuple[DesignPoint, Dict]) -> Tuple[int, float]:
+        # frontier membership first, then the sweep's scoring objective
+        # (pre-energy journal records lack objective_value; they can only
+        # have been produced by a latency sweep, where it == total_ns)
         p, rec = entry
         return (0 if rec["point_key"] in front_keys else 1,
-                rec["total_ns"])
+                rec.get("objective_value", rec["total_ns"]))
 
     def select() -> DesignPoint:
         a, b = rng.choice(pool), rng.choice(pool)

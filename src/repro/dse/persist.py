@@ -25,14 +25,30 @@ from typing import Dict, Iterator, Optional
 
 def content_key(network: str, mode: str, strategy: str, seed: int,
                 n_candidates: int, max_steps: int, refine_passes: int,
-                arch_key: str) -> str:
-    """Stable identity of one (network, search config, arch) evaluation."""
-    blob = json.dumps(
-        {"network": network, "mode": mode, "strategy": strategy,
-         "seed": seed, "n_candidates": n_candidates,
-         "max_steps": max_steps, "refine_passes": refine_passes,
-         "arch_key": arch_key},
-        sort_keys=True, separators=(",", ":"))
+                arch_key: str, objective: str = "latency") -> str:
+    """Stable identity of one (network, search config, arch) evaluation.
+
+    ``objective`` enters the blob only when it deviates from "latency"
+    (the implicit objective of every pre-energy journal), so those
+    journals keep serving latency sweeps for modes whose records are
+    unchanged — while every other objective gets distinct keys.
+
+    Transform-mode keys additionally carry ``energy_rev=1``: the
+    energy-aware search changed what a transform evaluation *records*
+    (``energy_pj`` now includes relocation energy, plus the
+    ``move_energy_pj``/``edp_ns_pj``/``objective_value`` columns), and a
+    resumed sweep must never mix pre-energy records with fresh ones on
+    the same frontier. Original/overlap evaluations never relocate, so
+    their records — and keys — are untouched."""
+    blob_dict = {"network": network, "mode": mode, "strategy": strategy,
+                 "seed": seed, "n_candidates": n_candidates,
+                 "max_steps": max_steps, "refine_passes": refine_passes,
+                 "arch_key": arch_key}
+    if objective != "latency":
+        blob_dict["objective"] = objective
+    if mode == "transform":
+        blob_dict["energy_rev"] = 1
+    blob = json.dumps(blob_dict, sort_keys=True, separators=(",", ":"))
     return hashlib.sha1(blob.encode()).hexdigest()
 
 

@@ -12,7 +12,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Iterable, List, Sequence, Tuple
 
-from .explore import DSEConfig, DSEResult, run_dse
+from .explore import DSEConfig, DSEResult, record_edp, run_dse
 from .pareto import ParetoFrontier
 
 
@@ -31,20 +31,27 @@ def _table(headers: Sequence[str], rows: List[Sequence[str]]) -> str:
 
 
 def frontier_table(frontier: ParetoFrontier) -> str:
-    """The non-dominated set, best latency first."""
+    """The non-dominated set, best latency first.
+
+    Both energy columns use the same pJ -> J conversion (1e12 pJ/J):
+    ``energy_J`` is the full mapping-level energy (compute + IO + tile
+    movement), ``move_energy_J`` the transform-relocation share of it
+    (absent in pre-energy journal records, shown as ``-``)."""
     rows = []
     for p in frontier.points:
         rec = p.payload or {}
+        move_pj = rec.get("move_energy_pj")
         rows.append((
             rec.get("arch_name", p.key),
             f"{p.objectives[0] / 1e6:.3f}",
             f"{p.objectives[1] / 1e12:.1f}",
+            "-" if move_pj is None else f"{move_pj / 1e12:.2e}",
             f"{p.objectives[2]:.2f}",
             f"{rec.get('power_w', float('nan')):.2f}",
             _fmt_point(rec.get("point", {})),
         ))
-    return _table(("arch", "latency_ms", "energy_J", "area_mm2",
-                   "power_W", "point"), rows)
+    return _table(("arch", "latency_ms", "energy_J", "move_energy_J",
+                   "area_mm2", "power_W", "point"), rows)
 
 
 def summarize(result: DSEResult) -> str:
@@ -53,14 +60,23 @@ def summarize(result: DSEResult) -> str:
     c = result.config
     lines = [
         f"dse: family={c.family} network={c.network} mode={c.mode} "
-        f"strategy={c.strategy} explorer={c.explorer}",
+        f"strategy={c.strategy} explorer={c.explorer} "
+        f"objective={c.objective}",
         f"dse: proposed={st['proposed']} evaluated={st['evaluated']} "
         f"from_journal={st['from_journal']} frontier={st['frontier']} "
         f"wall_s={st['wall_s']:.1f}",
         f"dse: baseline {base['arch_name']} "
         f"latency_ms={base['total_ns'] / 1e6:.3f} "
+        f"energy_J={base['energy_pj'] / 1e12:.1f} "
         f"area_mm2={base['area_mm2']:.2f}",
     ]
+    best_edp = result.best_by("edp_ns_pj")
+    if best_edp is not None:
+        edp = record_edp(best_edp)
+        lines.append(
+            f"dse: best-EDP {best_edp['arch_name']} edp={edp:.4e} "
+            f"latency_ms={best_edp['total_ns'] / 1e6:.3f} "
+            f"energy_J={best_edp['energy_pj'] / 1e12:.1f}")
     best = result.best_within_area()
     if best is not None and best is not result.baseline:
         speedup = base["total_ns"] / best["total_ns"]

@@ -220,6 +220,86 @@ def test_point_key_content_identity():
     assert point_key(sp, p, d1) != point_key(sp, q, d1)
 
 
+def test_objective_journal_key_separation():
+    """Non-latency objectives get distinct journal keys (their chosen
+    mappings differ); blend keys depend on alpha; transform-mode keys
+    are revved past the pre-energy derivation (their records changed:
+    energy now includes relocation) while original/overlap keys still
+    match it — journals from before the energy-aware search keep
+    serving the modes whose records are unchanged, and only those."""
+    import hashlib
+    import json as _json
+    sp = tiny_space()
+    p = sp.default()
+    lat = point_key(sp, p, tiny_dcfg())
+    keys = {lat}
+    for obj in ("energy", "edp", "blend"):
+        keys.add(point_key(sp, p, tiny_dcfg(objective=obj)))
+    assert len(keys) == 4
+    # blend keys depend on alpha too
+    assert point_key(sp, p, tiny_dcfg(objective="blend", blend_alpha=0.5)) \
+        != point_key(sp, p, tiny_dcfg(objective="blend", blend_alpha=0.9))
+
+    def pre_energy_key(d):
+        blob = _json.dumps(
+            {"network": d.network, "mode": d.mode, "strategy": d.strategy,
+             "seed": d.seed, "n_candidates": d.n_candidates,
+             "max_steps": d.max_steps, "refine_passes": d.refine_passes,
+             "arch_key": sp.build(p).to_key()},
+            sort_keys=True, separators=(",", ":"))
+        return hashlib.sha1(blob.encode()).hexdigest()
+
+    # transform: intentionally invalidated (stale energies must re-eval)
+    assert lat != pre_energy_key(tiny_dcfg())
+    # original/overlap: records unchanged, legacy keys preserved
+    for mode in ("original", "overlap"):
+        d = tiny_dcfg(mode=mode)
+        assert point_key(sp, p, d) == pre_energy_key(d)
+
+
+def test_dse_config_rejects_bad_objective_args():
+    with pytest.raises(AssertionError):
+        tiny_dcfg(objective="joules")
+    with pytest.raises(AssertionError):
+        tiny_dcfg(objective="blend", blend_alpha=1.5)
+
+
+def test_frontier_table_tolerates_pre_energy_records():
+    """Journal records written before the energy-aware search lack
+    move_energy_pj; the frontier table must render them (as '-'), not
+    crash a resumed sweep's report."""
+    f = ParetoFrontier()
+    f.add_record("old", {"total_ns": 10.0, "energy_pj": 5.0,
+                         "area_mm2": 1.0, "arch_name": "a", "point": {}})
+    f.add_record("new", {"total_ns": 5.0, "energy_pj": 9.0,
+                         "area_mm2": 1.0, "arch_name": "b", "point": {},
+                         "move_energy_pj": 123.0, "power_w": 1.0})
+    out = frontier_table(f)
+    assert "move_energy_J" in out and "-" in out
+
+
+def test_records_carry_objective_fields(monkeypatch):
+    """Fresh evaluations journal the objective and its scalarized value
+    (the evolutionary fitness), plus the move-energy/EDP columns."""
+    layers = [LayerSpec("l0", K=4, C=4, P=4, Q=4, R=3, S=3, pad=1),
+              LayerSpec("l1", K=4, C=4, P=4, Q=4, R=3, S=3, pad=1)]
+    import repro.dse.explore as ex
+    monkeypatch.setattr(
+        ex, "describe",
+        lambda name: type("D", (), {"layers": layers,
+                                    "edges": chain_edges(layers)})())
+    sp = tiny_space()
+    res = run_dse(tiny_dcfg(objective="edp", budget=3), space=sp)
+    for rec in res.records:
+        assert rec["objective"] == "edp"
+        assert rec["objective_value"] == \
+            rec["total_ns"] * rec["energy_pj"]
+        assert rec["edp_ns_pj"] == rec["total_ns"] * rec["energy_pj"]
+        assert rec["move_energy_pj"] >= 0.0
+        assert rec["energy_pj"] >= rec["move_energy_pj"]
+    assert res.best_by("edp_ns_pj") is not None
+
+
 # ---------------------------------------------------------------------------
 # Explorers: determinism, journal reuse, stub-landscape behavior.
 # ---------------------------------------------------------------------------
