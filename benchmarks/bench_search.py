@@ -19,6 +19,9 @@ Every row is additionally mirrored into ``BENCH_search.json`` (see
 """
 from __future__ import annotations
 
+import os
+import shutil
+import tempfile
 import time
 
 from repro.core import (MODES, STRATEGIES, SearchConfig, describe,
@@ -160,6 +163,60 @@ def objective_frontier():
             f";edp_edp_search={edp_edp:.4e}"
             f";edp_win={edp_lat / edp_edp:.4f}x"
             f";dominates={edp_edp < edp_lat}")
+
+
+def worker_scaling():
+    """1-vs-N-worker wall time of the distributed sweep subsystem
+    (DESIGN.md Section 10) on a resnet18 grid sweep: every arm runs the
+    full shared-dir protocol (manifests, leases, shard publish) against
+    a fresh directory, so each evaluates all points from scratch. Arms
+    are interleaved and the per-arm best of ``reps`` is reported — the
+    sandboxed 2-core CI/container hosts this runs on have noisy,
+    drifting CPU allocation, and min-of-k is the standard way to read
+    a stable number through that. The derived column records the host
+    core count next to the speedup: scaling saturates at the physical
+    parallelism, so a 4-worker arm on a 2-core box is bounded by the
+    2-way optimum (the compute gate keeps it *at* that optimum instead
+    of timeslice-thrashing below it)."""
+    from repro.dse import DSEConfig, DistribConfig, run_distributed
+
+    budget = 24 if QUICK else 32
+    reps = 2 if QUICK else 3
+    counts = (1, 2, 4)
+    base = dict(family="dram_pim", network="resnet18", mode="transform",
+                explorer="grid", budget=budget, seed=SEED,
+                n_candidates=4, max_steps=1024)
+    walls = {n: [] for n in counts}
+    for _ in range(reps):
+        for n in counts:
+            root = tempfile.mkdtemp(prefix=f"dse-scale-w{n}-")
+            try:
+                t0 = time.perf_counter()
+                res = run_distributed(
+                    DSEConfig(**base),
+                    DistribConfig(root=root, n_workers=n,
+                                  worker_mode="process"))
+                walls[n].append(time.perf_counter() - t0)
+                if res.stats["evaluated"] != budget:
+                    raise AssertionError(
+                        f"scaling arm w{n} evaluated "
+                        f"{res.stats['evaluated']} != {budget}")
+            finally:
+                shutil.rmtree(root, ignore_errors=True)
+    for n in counts:
+        # speedups are paired *within* a rep — the 1-worker arm of the
+        # same rep ran under the same host weather — then best-of-reps;
+        # the row reports that same rep's wall times, so the headline
+        # ratio is always reproducible from the numbers printed next
+        # to it
+        speedup, w1_wall, wn_wall = max(
+            ((w1 / wn, w1, wn) for w1, wn in zip(walls[1], walls[n])),
+            key=lambda t: (t[0], -t[2]))
+        yield _emit(
+            f"bench_search.dse_worker_scaling_w{n}", wn_wall * 1e6,
+            f"budget={budget};best_of={reps};wall_s={wn_wall:.2f}"
+            f";w1_wall_s={w1_wall:.2f};speedup_vs_1w={speedup:.2f}x"
+            f";cores={os.cpu_count()}")
 
 
 def search_wall():

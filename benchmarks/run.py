@@ -1,18 +1,24 @@
 """Benchmark driver.
 
-Two entry points::
+Entry points::
 
-    python benchmarks/run.py [bench]      # paper-figure + perf CSV suite
-    python benchmarks/run.py dse [...]    # architecture DSE sweep
+    python benchmarks/run.py [bench]            # paper-figure CSV suite
+    python benchmarks/run.py dse [...]          # architecture DSE sweep
+    python benchmarks/run.py dse-worker [...]   # join a distributed sweep
+    python benchmarks/run.py dse-coordinator [...]  # drive one
 
-Both also work as ``python -m benchmarks.run`` with ``PYTHONPATH=src``;
+All also work as ``python -m benchmarks.run`` with ``PYTHONPATH=src``;
 run as a plain script the repo root and ``src/`` are bootstrapped onto
 ``sys.path``. The ``bench`` suite prints ``name,us_per_call,derived`` CSV
 (set ``BENCH_FULL=1`` for paper-scale budgets); perf-relevant rows are
 mirrored into ``BENCH_search.json``. The ``dse`` subcommand co-searches
 PIM architectures x overlap mappings (``repro.dse``), prints the Pareto
 frontier and writes a resumable JSONL journal — re-running a finished
-sweep performs zero new mapping searches.
+sweep performs zero new mapping searches. ``dse --distributed N`` runs
+the same sweep through the shared-dir work-stealing subsystem
+(``repro.dse.distrib``) with N local worker processes; the
+``dse-worker``/``dse-coordinator`` pair does the same across real
+processes or machines sharing one directory (DESIGN.md Section 10).
 """
 import argparse
 import dataclasses
@@ -36,6 +42,7 @@ def bench_main() -> None:
         bench_search.e2e_speedup,
         bench_search.search_wall,
         bench_search.objective_frontier,
+        bench_search.worker_scaling,
         paper_figs.fig4_motivation,
         paper_figs.fig10_overall,
         paper_figs.fig11_vs_overlapim,
@@ -100,14 +107,66 @@ def _dse_parser() -> argparse.ArgumentParser:
     p.add_argument("--journal", default=None,
                    help="JSONL journal path (default: "
                         "dse_runs/<family>_<network>_<mode>.jsonl)")
+    p.add_argument("--distributed", type=int, default=0, metavar="N",
+                   help="run the sweep through the distributed subsystem "
+                        "with N local worker processes sharing a journal "
+                        "directory (repro.dse.distrib)")
+    p.add_argument("--shared-dir", default=None,
+                   help="shared journal directory for --distributed / "
+                        "dse-coordinator (default: <journal path with "
+                        ".jsonl replaced by .shared>)")
+    p.add_argument("--batch-size", type=int, default=1,
+                   help="design points per distributed work batch")
+    p.add_argument("--lease-ttl", type=float, default=60.0,
+                   help="seconds before a silent worker's batch lease "
+                        "expires and peers may steal it")
+    p.add_argument("--compact-journal", action="store_true",
+                   help="compact the journal (drop superseded later-wins "
+                        "duplicates and any truncated tail) and exit")
+    p.add_argument("--frontier-out", default=None, metavar="PATH",
+                   help="also write the frontier's canonical JSON to "
+                        "PATH (byte-comparable across runs/workers)")
     return p
+
+
+def _dse_config_from_args(args):
+    """THE args -> DSEConfig mapping — every scoring-relevant CLI flag
+    is wired here once, so `dse`, `dse --distributed` and
+    `dse-coordinator` can never score the same sweep under silently
+    different configs (the bit-identical-frontier contract)."""
+    from repro.dse import DSEConfig
+    return DSEConfig(
+        family=args.family, network=args.network, mode=args.mode,
+        strategy=args.strategy, explorer=args.explorer,
+        budget=args.budget, seed=args.seed, n_candidates=args.candidates,
+        max_steps=args.max_steps, objective=args.objective,
+        blend_alpha=args.blend_alpha, workers=args.workers)
+
+
+def _compact_journal(journal_path=None, shared_dir=None) -> None:
+    from repro.dse import RunJournal, SharedDirBackend
+    if shared_dir is not None:
+        j, where = RunJournal(backend=SharedDirBackend(shared_dir)), \
+            shared_dir
+    else:
+        j, where = RunJournal(journal_path), journal_path
+    before, after = j.compact()
+    print(f"dse: compacted {where}: {before} lines -> {after}")
+
+
+def _write_frontier(res, path) -> None:
+    if not path:
+        return
+    with open(path, "w", encoding="utf-8") as fh:
+        fh.write(res.frontier.canonical_json() + "\n")
+    print(f"dse: frontier written to {path}")
 
 
 def dse_main(argv) -> None:
     args = _dse_parser().parse_args(argv)
     from benchmarks import record
-    from repro.dse import (DSEConfig, best_arch_table, frontier_table,
-                           record_edp, run_dse, summarize, sweep_networks)
+    from repro.dse import (best_arch_table, frontier_table, record_edp,
+                           run_dse, summarize, sweep_networks)
 
     # one journal-naming scheme for both branches; a literal --journal
     # path has no {placeholders} and formats to itself. Non-latency
@@ -165,12 +224,7 @@ def dse_main(argv) -> None:
                 for p in res.frontier.points],
         }
 
-    base = DSEConfig(
-        family=args.family, mode=args.mode, strategy=args.strategy,
-        explorer=args.explorer, budget=args.budget, seed=args.seed,
-        n_candidates=args.candidates, max_steps=args.max_steps,
-        objective=args.objective, blend_alpha=args.blend_alpha,
-        workers=args.workers)
+    base = _dse_config_from_args(args)
 
     # dse-journal key: objective-suffixed for non-latency sweeps so the
     # pre-energy entries keep tracking the latency trajectory
@@ -179,6 +233,10 @@ def dse_main(argv) -> None:
             f"/{obj_tag}" if obj_tag else "")
 
     if args.network == "all":
+        if args.distributed or args.compact_journal or args.frontier_out:
+            print("--distributed/--compact-journal/--frontier-out need "
+                  "a single --network, not 'all'", file=sys.stderr)
+            sys.exit(2)
         base = dataclasses.replace(base, journal_path=journal_template)
         results = sweep_networks(base)
         for (net, mode), res in sorted(results.items()):
@@ -190,14 +248,39 @@ def dse_main(argv) -> None:
         print(best_arch_table(results))
         return
 
-    cfg = dataclasses.replace(
-        base, network=args.network,
-        journal_path=journal_template.format(network=args.network,
-                                             mode=args.mode))
-    res = run_dse(cfg)
-    print(summarize(res))
-    print(frontier_table(res.frontier))
-    print(f"dse: journal={cfg.journal_path} entries={_journal_len(cfg)}")
+    journal_path = journal_template.format(network=args.network,
+                                           mode=args.mode)
+    shared_dir = args.shared_dir or (
+        journal_path[:-len(".jsonl")] if journal_path.endswith(".jsonl")
+        else journal_path) + ".shared"
+
+    if args.compact_journal:
+        if args.shared_dir or args.distributed:
+            _compact_journal(shared_dir=shared_dir)
+        else:
+            _compact_journal(journal_path=journal_path)
+        return
+
+    cfg = dataclasses.replace(base, network=args.network,
+                              journal_path=journal_path)
+    if args.distributed:
+        from repro.dse import DistribConfig, run_distributed
+        dist = DistribConfig(root=shared_dir, n_workers=args.distributed,
+                             batch_size=args.batch_size,
+                             lease_ttl_s=args.lease_ttl)
+        res = run_distributed(dataclasses.replace(cfg, journal_path=None),
+                              dist)
+        print(summarize(res))
+        print(frontier_table(res.frontier))
+        print(f"dse: shared-dir={shared_dir} "
+              f"workers={args.distributed} "
+              f"batches={res.stats['batches']}")
+    else:
+        res = run_dse(cfg)
+        print(summarize(res))
+        print(frontier_table(res.frontier))
+        print(f"dse: journal={cfg.journal_path} entries={_journal_len(cfg)}")
+    _write_frontier(res, args.frontier_out)
     record.update_dse(dse_key(args.network, args.mode),
                       sweep_summary(res))
 
@@ -207,15 +290,80 @@ def _journal_len(cfg) -> int:
     return len(RunJournal(cfg.journal_path))
 
 
+def dse_worker_main(argv) -> None:
+    """Join a distributed sweep knowing nothing but the shared dir."""
+    from repro.dse.distrib import WorkerConfig, worker_loop
+
+    p = argparse.ArgumentParser(
+        prog="run.py dse-worker",
+        description="Evaluate batches of a distributed DSE sweep until "
+                    "the coordinator posts STOP. Point any number of "
+                    "these (any machine) at one shared directory.")
+    p.add_argument("--shared-dir", required=True)
+    p.add_argument("--worker-id", default=None,
+                   help="stable identity (default: pid + random)")
+    p.add_argument("--lease-ttl", type=float, default=60.0)
+    p.add_argument("--poll", type=float, default=0.05)
+    p.add_argument("--max-idle", type=float, default=900.0,
+                   help="exit after this many idle seconds even without "
+                        "a STOP (default 900 — bounds orphaned workers "
+                        "whose sweep finished before they started; pass "
+                        "0 for a standing fleet that only STOP ends)")
+    args = p.parse_args(argv)
+    stats = worker_loop(WorkerConfig(
+        root=args.shared_dir, worker_id=args.worker_id,
+        poll_s=args.poll, lease_ttl_s=args.lease_ttl,
+        max_idle_s=args.max_idle if args.max_idle > 0 else None))
+    print("dse-worker: " + " ".join(f"{k}={v}"
+                                    for k, v in sorted(stats.items())))
+
+
+def dse_coordinator_main(argv) -> None:
+    """Drive a sweep; external dse-worker processes supply the compute."""
+    p = _dse_parser()
+    p.prog = "run.py dse-coordinator"
+    p.add_argument("--timeout", type=float, default=3600.0,
+                   help="seconds to wait for external workers to finish "
+                        "all outstanding evaluations")
+    args = p.parse_args(argv)
+    if args.network == "all":
+        print("dse-coordinator needs a single --network", file=sys.stderr)
+        sys.exit(2)
+    if not args.shared_dir:
+        print("dse-coordinator requires --shared-dir", file=sys.stderr)
+        sys.exit(2)
+    if args.distributed or args.workers:
+        print("dse-coordinator spawns no local workers; start "
+              "'dse-worker --shared-dir ...' processes instead of "
+              "passing --distributed/--workers", file=sys.stderr)
+        sys.exit(2)
+    if args.compact_journal:
+        _compact_journal(shared_dir=args.shared_dir)
+        return
+    from repro.dse import DistribConfig, run_coordinator
+    from repro.dse.report import frontier_table, summarize
+    dist = DistribConfig(root=args.shared_dir, batch_size=args.batch_size,
+                         lease_ttl_s=args.lease_ttl,
+                         timeout_s=args.timeout)
+    res = run_coordinator(_dse_config_from_args(args), dist)
+    print(summarize(res))
+    print(frontier_table(res.frontier))
+    _write_frontier(res, args.frontier_out)
+
+
 def main() -> None:
     argv = sys.argv[1:]
     if argv and argv[0] == "dse":
         dse_main(argv[1:])
+    elif argv and argv[0] == "dse-worker":
+        dse_worker_main(argv[1:])
+    elif argv and argv[0] == "dse-coordinator":
+        dse_coordinator_main(argv[1:])
     elif not argv or argv[0] == "bench":
         bench_main()
     else:
-        print(f"unknown subcommand {argv[0]!r}; use 'bench' or 'dse'",
-              file=sys.stderr)
+        print(f"unknown subcommand {argv[0]!r}; use 'bench', 'dse', "
+              "'dse-worker' or 'dse-coordinator'", file=sys.stderr)
         sys.exit(2)
 
 

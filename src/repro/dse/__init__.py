@@ -5,11 +5,15 @@ jointly with overlap-driven mapping search: the NicePIM/PIMSYN-style
 "best (arch, mapping) pair" capability on top of Fast-OverlaPIM's fast
 overlap analysis. See DESIGN.md Section 8.
 """
-from .explore import (DSEConfig, DSEResult, EXPLORERS, evaluate_point,
-                      network_energy_pj, point_key, record_edp, run_dse)
+from .distrib import (DistribConfig, run_coordinator, run_distributed,
+                      worker_loop)
+from .explore import (DSEConfig, DSEResult, EXPLORERS, ProposalStream,
+                      evaluate_point, network_energy_pj, point_key,
+                      proposal_stream, record_edp, run_dse)
 from .pareto import (DEFAULT_OBJECTIVES, FrontierPoint, ParetoFrontier,
                      dominates)
-from .persist import RunJournal, content_key
+from .persist import (FileBackend, JournalBackend, RunJournal,
+                      SharedDirBackend, content_key)
 from .report import (best_arch_table, frontier_table, summarize,
                      sweep_networks)
 from .space import (DesignPoint, ParamSpace, SPACES, dram_space, get_space,

@@ -22,6 +22,13 @@ All explorers are deterministic in ``DSEConfig.seed``: the same config
 proposes the same points in the same order (the evolutionary explorer
 selects on journal-identical scores), which is what makes journal resume
 exact rather than best-effort.
+
+Proposal generation itself is a pure stream (``proposal_stream`` /
+``ProposalStream``): generations are proposed through ``next_batch()``
+and advanced only by ``observe()``d records, so *how* a generation got
+scored — serial, process pool, or N distributed workers over a shared
+journal (``repro.dse.distrib``) — cannot influence what is proposed
+next. The distributed coordinator drives exactly these streams.
 """
 from __future__ import annotations
 
@@ -279,14 +286,76 @@ class _Evaluator:
                 rec = _make_record(points[i], self.dcfg, a, f)
                 out[i] = self.journal.record(keys[i], rec)
             self.n_evaluated += len(misses)
+            # no-op for file journals; shard-publish for shared-dir ones
+            self.journal.publish()
         return out  # type: ignore[return-value]
 
 
 # ---------------------------------------------------------------------------
-# Explorers. Each yields batches of fresh points until the budget is spent.
+# Proposal streams. Proposal generation is a *pure, seed-deterministic
+# stream* decoupled from evaluation: next_batch() yields the next
+# generation of fresh points, observe() feeds their scored records back
+# in batch order — the ONLY channel through which evaluation influences
+# later proposals. Identical observed records => identical proposal
+# sequence, no matter who (or how many distributed workers) produced
+# them; that is the distributed-sweep determinism argument (DESIGN.md
+# Section 10): N workers reproduce the 1-worker frontier bit-exactly.
 # ---------------------------------------------------------------------------
 
-def _grid_points(space: ParamSpace, dcfg: DSEConfig) -> List[List[DesignPoint]]:
+class ProposalStream:
+    """Alternating ``next_batch()`` / ``observe()`` proposal protocol.
+
+    ``next_batch`` returns the next generation of fresh, deduplicated
+    ``DesignPoint``s (``None`` once the budget is spent or the space is
+    exhausted); ``observe`` must then be called with the scored records
+    of exactly that batch, in batch order, before the next generation
+    can be proposed."""
+
+    def __init__(self, space: ParamSpace, dcfg: DSEConfig):
+        self.space = space
+        self.dcfg = dcfg
+        self.n_proposed = 0
+        self._awaiting = False
+
+    def next_batch(self) -> Optional[List[DesignPoint]]:
+        assert not self._awaiting, \
+            "observe() the previous batch before proposing the next"
+        batch = self._propose()
+        if not batch:
+            return None
+        self.n_proposed += len(batch)
+        self._awaiting = True
+        return batch
+
+    def observe(self, points: Sequence[DesignPoint],
+                records: Sequence[Dict]) -> None:
+        assert self._awaiting, "observe() without a pending batch"
+        assert len(points) == len(records)
+        self._awaiting = False
+        self._digest(points, records)
+
+    def _propose(self) -> List[DesignPoint]:
+        raise NotImplementedError
+
+    def _digest(self, points: Sequence[DesignPoint],
+                records: Sequence[Dict]) -> None:
+        pass  # grid/random ignore scores
+
+
+class _OneShotStream(ProposalStream):
+    """grid/random: the whole proposal list is known upfront."""
+
+    def __init__(self, space: ParamSpace, dcfg: DSEConfig,
+                 points: List[DesignPoint]):
+        super().__init__(space, dcfg)
+        self._points = points
+
+    def _propose(self) -> List[DesignPoint]:
+        pts, self._points = self._points, []
+        return pts
+
+
+def _grid_list(space: ParamSpace, dcfg: DSEConfig) -> List[DesignPoint]:
     """Default point first (the baseline), then grid order."""
     out, seen = [space.default()], {space.default().key()}
     for p in space.enumerate():
@@ -295,11 +364,10 @@ def _grid_points(space: ParamSpace, dcfg: DSEConfig) -> List[List[DesignPoint]]:
         if p.key() not in seen:
             seen.add(p.key())
             out.append(p)
-    return [out]
+    return out
 
 
-def _random_points(space: ParamSpace, dcfg: DSEConfig) \
-        -> List[List[DesignPoint]]:
+def _random_list(space: ParamSpace, dcfg: DSEConfig) -> List[DesignPoint]:
     rng = random.Random(dcfg.seed)
     out, seen = [space.default()], {space.default().key()}
     tries = 0
@@ -309,7 +377,93 @@ def _random_points(space: ParamSpace, dcfg: DSEConfig) \
         if p.key() not in seen:
             seen.add(p.key())
             out.append(p)
-    return [out]
+    return out
+
+
+class _EvolveStream(ProposalStream):
+    """(mu + lambda)-style evolution over arch genes.
+
+    Generation 0 is the default point plus random samples. Parents are
+    tournament-selected with Pareto-frontier membership beating raw
+    latency; children are per-gene crossover then (p=mutation_rate) an
+    adjacent-value mutation. Proposals are deduplicated against
+    everything seen, so the budget is spent on distinct points. State
+    advances exclusively through ``observe``d records — in a distributed
+    sweep those come from the *merged* journal, so every worker count
+    sees the same scores and the rng consumes the same sequence."""
+
+    def __init__(self, space: ParamSpace, dcfg: DSEConfig):
+        super().__init__(space, dcfg)
+        self.rng = random.Random(dcfg.seed ^ 0x9E3779B9)
+        self.pop_size = max(2, min(dcfg.population, dcfg.budget))
+        self.seen: set = set()
+        self.pool: List[Tuple[DesignPoint, Dict]] = []
+        self.frontier = ParetoFrontier()
+        self.front_keys: set = set()   # refreshed once per generation
+
+    def _fitness(self, entry: Tuple[DesignPoint, Dict]) -> Tuple[int, float]:
+        # frontier membership first, then the sweep's scoring objective
+        # (pre-energy journal records lack objective_value; they can only
+        # have been produced by a latency sweep, where it == total_ns)
+        p, rec = entry
+        return (0 if rec["point_key"] in self.front_keys else 1,
+                rec.get("objective_value", rec["total_ns"]))
+
+    def _select(self) -> DesignPoint:
+        a, b = self.rng.choice(self.pool), self.rng.choice(self.pool)
+        return min((a, b), key=self._fitness)[0]
+
+    def _propose(self) -> List[DesignPoint]:
+        if self.n_proposed == 0:
+            init = [self.space.default()]
+            self.seen.add(init[0].key())
+            tries = 0
+            while len(init) < self.pop_size and tries < self.pop_size * 64:
+                p = self.space.sample(self.rng)
+                tries += 1
+                if p.key() not in self.seen:
+                    self.seen.add(p.key())
+                    init.append(p)
+            return init[:self.dcfg.budget]
+        batch: List[DesignPoint] = []
+        attempts = 0
+        want = min(self.pop_size, self.dcfg.budget - self.n_proposed)
+        while len(batch) < want and attempts < want * 64:
+            attempts += 1
+            child = self.space.crossover(self._select(), self._select(),
+                                         self.rng)
+            if self.rng.random() < self.dcfg.mutation_rate:
+                child = self.space.mutate(child, self.rng)
+            if child.key() in self.seen:
+                child = self.space.mutate(child, self.rng)
+            if child.key() in self.seen:
+                continue
+            self.seen.add(child.key())
+            batch.append(child)
+        return batch  # empty => space exhausted => stream ends
+
+    def _digest(self, points: Sequence[DesignPoint],
+                records: Sequence[Dict]) -> None:
+        for p, rec in zip(points, records):
+            self.frontier.add_record(p.key(), rec)
+        if not self.pool:          # generation 0: seed the parent pool
+            self.pool = list(zip(points, records))
+            self.front_keys = self.frontier.key_set()
+            return
+        self.front_keys = self.frontier.key_set()
+        self.pool.extend(zip(points, records))
+        self.pool.sort(key=self._fitness)
+        del self.pool[max(self.pop_size, 2):]
+
+
+def proposal_stream(space: ParamSpace, dcfg: DSEConfig) -> ProposalStream:
+    """THE explorer factory — serial ``run_dse`` and the distributed
+    coordinator drive the same streams, which is what makes them agree."""
+    if dcfg.explorer == "grid":
+        return _OneShotStream(space, dcfg, _grid_list(space, dcfg))
+    if dcfg.explorer == "random":
+        return _OneShotStream(space, dcfg, _random_list(space, dcfg))
+    return _EvolveStream(space, dcfg)
 
 
 def run_dse(dcfg: DSEConfig, space: Optional[ParamSpace] = None,
@@ -326,20 +480,16 @@ def run_dse(dcfg: DSEConfig, space: Optional[ParamSpace] = None,
     records: List[Dict] = []
     t0 = time.perf_counter()
     try:
-        if dcfg.explorer == "grid":
-            batches = _grid_points(space, dcfg)
-        elif dcfg.explorer == "random":
-            batches = _random_points(space, dcfg)
-        else:
-            batches = None  # evolve proposes adaptively below
-
-        if batches is not None:
-            for batch in batches:
-                for p, rec in zip(batch, ev(batch)):
-                    records.append(rec)
-                    frontier.add_record(p.key(), rec)
-        else:
-            _run_evolve(space, dcfg, ev, frontier, records)
+        stream = proposal_stream(space, dcfg)
+        while True:
+            batch = stream.next_batch()
+            if batch is None:
+                break
+            recs = ev(batch)
+            for p, rec in zip(batch, recs):
+                records.append(rec)
+                frontier.add_record(p.key(), rec)
+            stream.observe(batch, recs)
     finally:
         ev.close()
     baseline = records[0]
@@ -352,72 +502,3 @@ def run_dse(dcfg: DSEConfig, space: Optional[ParamSpace] = None,
     }
     return DSEResult(config=dcfg, records=records, frontier=frontier,
                      baseline=baseline, stats=stats)
-
-
-def _run_evolve(space: ParamSpace, dcfg: DSEConfig, ev: _Evaluator,
-                frontier: ParetoFrontier, records: List[Dict]) -> None:
-    """(mu + lambda)-style evolution over arch genes.
-
-    Generation 0 is the default point plus random samples. Parents are
-    tournament-selected with Pareto-frontier membership beating raw
-    latency; children are per-gene crossover then (p=mutation_rate) an
-    adjacent-value mutation. Proposals are deduplicated against everything
-    seen, so the budget is spent on distinct points."""
-    rng = random.Random(dcfg.seed ^ 0x9E3779B9)
-    pop_size = max(2, min(dcfg.population, dcfg.budget))
-
-    init = [space.default()]
-    seen = {init[0].key()}
-    tries = 0
-    while len(init) < pop_size and tries < pop_size * 64:
-        p = space.sample(rng)
-        tries += 1
-        if p.key() not in seen:
-            seen.add(p.key())
-            init.append(p)
-    init = init[:dcfg.budget]
-    pts = list(init)
-    recs = ev(pts)
-    for p, rec in zip(pts, recs):
-        records.append(rec)
-        frontier.add_record(p.key(), rec)
-    pool: List[Tuple[DesignPoint, Dict]] = list(zip(pts, recs))
-    front_keys = frontier.key_set()   # refreshed once per generation
-
-    def fitness(entry: Tuple[DesignPoint, Dict]) -> Tuple[int, float]:
-        # frontier membership first, then the sweep's scoring objective
-        # (pre-energy journal records lack objective_value; they can only
-        # have been produced by a latency sweep, where it == total_ns)
-        p, rec = entry
-        return (0 if rec["point_key"] in front_keys else 1,
-                rec.get("objective_value", rec["total_ns"]))
-
-    def select() -> DesignPoint:
-        a, b = rng.choice(pool), rng.choice(pool)
-        return min((a, b), key=fitness)[0]
-
-    while len(records) < dcfg.budget:
-        batch: List[DesignPoint] = []
-        attempts = 0
-        want = min(pop_size, dcfg.budget - len(records))
-        while len(batch) < want and attempts < want * 64:
-            attempts += 1
-            child = space.crossover(select(), select(), rng)
-            if rng.random() < dcfg.mutation_rate:
-                child = space.mutate(child, rng)
-            if child.key() in seen:
-                child = space.mutate(child, rng)
-            if child.key() in seen:
-                continue
-            seen.add(child.key())
-            batch.append(child)
-        if not batch:  # space exhausted
-            break
-        recs = ev(batch)
-        for p, rec in zip(batch, recs):
-            records.append(rec)
-            frontier.add_record(p.key(), rec)
-        front_keys = frontier.key_set()
-        pool.extend(zip(batch, recs))
-        pool.sort(key=fitness)
-        del pool[max(pop_size, 2):]

@@ -10,6 +10,7 @@ makes resumed sweeps idempotent.
 from __future__ import annotations
 
 import dataclasses
+import json
 from typing import Dict, List, Optional, Sequence, Tuple
 
 DEFAULT_OBJECTIVES = ("total_ns", "energy_pj", "area_mm2")
@@ -92,3 +93,16 @@ class ParetoFrontier:
             return None
         i = self.names.index(name)
         return min(self._points, key=lambda p: p.objectives[i])
+
+    def canonical_json(self) -> str:
+        """Canonical serialization for byte-comparing frontiers across
+        runs and worker counts (payloads carry wall-clock noise and are
+        excluded; key + objectives are the frontier's identity). Exact
+        duplicate objective vectors are rejected on ``add``, so sorting
+        by (objectives, key) is a total order."""
+        pts = sorted(self._points, key=lambda p: (p.objectives, p.key))
+        return json.dumps(
+            {"names": list(self.names),
+             "points": [{"key": p.key, "objectives": list(p.objectives)}
+                        for p in pts]},
+            sort_keys=True, separators=(",", ":"))

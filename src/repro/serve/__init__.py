@@ -1,1 +1,4 @@
-"""serve subpackage."""
+"""Batched serving engine (prefill + decode with a fixed-size KV cache)."""
+from .engine import Engine, ServeConfig
+
+__all__ = ["Engine", "ServeConfig"]

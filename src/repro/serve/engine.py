@@ -1,7 +1,7 @@
 """Batched serving engine: prefill + decode with a fixed-size KV cache.
 
 Implements the inference side of the framework: a request batch is
-prefETCHED through ``prefill`` (scored prompt, cache primed), then tokens
+prefilled through ``prefill`` (scored prompt, cache primed), then tokens
 are emitted with the jitted single-token ``serve_step``. Greedy or
 temperature sampling; per-sequence stop handling via an active mask
 (continuous-batching-lite: finished slots keep decoding but their tokens

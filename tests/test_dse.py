@@ -180,6 +180,59 @@ def test_frontier_incremental_pruning():
     assert not f.dominated((0.5, 5.0))
 
 
+def test_frontier_exact_tie_on_all_objectives_keeps_first():
+    """A candidate tying an incumbent on *every* objective is redundant:
+    rejected, incumbent (first writer) retained — resume idempotence."""
+    f = ParetoFrontier(("a", "b"))
+    assert f.add("first", (2.0, 3.0))
+    assert not f.add("second", (2.0, 3.0))
+    assert len(f) == 1 and f.points[0].key == "first"
+    # and ints tie floats: objectives are canonicalized to float
+    assert not f.add("third", (2, 3))
+    assert f.dominated((2.0, 3.0))
+
+
+def test_frontier_equal_latency_different_area_both_kept():
+    """Points equal on one objective but trading the other are mutually
+    non-dominating (dominance needs a *strict* win somewhere)."""
+    f = ParetoFrontier(("total_ns", "area_mm2"))
+    assert f.add("small", (10.0, 1.0))
+    assert f.add("big", (10.0, 2.0)) is False  # dominated: same lat, worse area
+    assert f.add("fast_big", (5.0, 2.0))       # trade: kept
+    assert {p.key for p in f.points} == {"small", "fast_big"}
+    # equal latency, *better* area evicts the incumbent
+    assert f.add("smaller", (10.0, 0.5))
+    assert {p.key for p in f.points} == {"smaller", "fast_big"}
+
+
+def test_frontier_duplicate_point_insertion_idempotent():
+    """Re-offering every frontier point (a resumed sweep replaying its
+    journal) changes nothing: same size, same keys, same order."""
+    f = ParetoFrontier(("a", "b"))
+    pts = [("p1", (1.0, 4.0)), ("p2", (2.0, 2.0)), ("p3", (4.0, 1.0)),
+           ("dom", (5.0, 5.0))]
+    for k, o in pts:
+        f.add(k, o)
+    before = [(p.key, p.objectives) for p in f.points]
+    canon = f.canonical_json()
+    for k, o in pts:
+        assert not f.add(k, o)
+    assert [(p.key, p.objectives) for p in f.points] == before
+    assert f.canonical_json() == canon
+
+
+def test_frontier_canonical_json_order_independent():
+    """The canonical serialization must not depend on insertion order —
+    it is the cross-run byte-equality witness."""
+    a, b = ParetoFrontier(("x", "y")), ParetoFrontier(("x", "y"))
+    pts = [("p1", (1.0, 4.0)), ("p2", (2.0, 2.0)), ("p3", (4.0, 1.0))]
+    for k, o in pts:
+        a.add(k, o)
+    for k, o in reversed(pts):
+        b.add(k, o)
+    assert a.canonical_json() == b.canonical_json()
+
+
 def test_frontier_best_and_record_api():
     f = ParetoFrontier(DEFAULT_OBJECTIVES)
     f.add_record("x", {"total_ns": 10.0, "energy_pj": 5.0,
@@ -207,6 +260,76 @@ def test_journal_roundtrip_and_truncation(tmp_path):
     # later lines win on key collisions (re-append is harmless)
     j2.record("k1", {"total_ns": 9.0})
     assert RunJournal(path).get("k1")["total_ns"] == 9.0
+
+
+def test_journal_compact_drops_duplicates_and_truncation(tmp_path):
+    """compact() rewrites the JSONL to one line per key: superseded
+    later-wins duplicates and the truncated tail disappear, the merged
+    view is unchanged, and appends keep working afterwards."""
+    path = str(tmp_path / "j.jsonl")
+    j = RunJournal(path)
+    j.record("k1", {"total_ns": 1.0})
+    j.record("k2", {"total_ns": 2.0})
+    j.record("k1", {"total_ns": 9.0})   # supersedes the first k1
+    with open(path, "a") as fh:
+        fh.write('{"key": "k3", "total_ns"')  # killed mid-append
+    before, after = RunJournal(path).compact()
+    assert (before, after) == (4, 2)
+    with open(path) as fh:
+        lines = [l for l in fh.read().splitlines() if l.strip()]
+    assert len(lines) == 2
+    j2 = RunJournal(path)
+    assert len(j2) == 2
+    assert j2.get("k1")["total_ns"] == 9.0 and "k3" not in j2
+    j2.record("k4", {"total_ns": 4.0})  # tail is clean post-compact
+    assert RunJournal(path).get("k4")["total_ns"] == 4.0
+    # in-memory journals have nothing to compact
+    assert RunJournal().compact() == (0, 0)
+
+
+def test_shared_dir_backend_publish_and_merge(tmp_path):
+    """SharedDirBackend: appends are invisible until publish; published
+    shards merge later-wins across writers; refresh picks up peers."""
+    from repro.dse import SharedDirBackend
+    root = str(tmp_path / "root")
+    a = RunJournal(backend=SharedDirBackend(root, writer_id="a"))
+    b = RunJournal(backend=SharedDirBackend(root, writer_id="b"))
+    a.record("k1", {"total_ns": 1.0})
+    assert b.refresh() == 0          # staged, not yet published
+    a.publish()
+    assert b.refresh() == 1
+    assert b.get("k1")["total_ns"] == 1.0
+    b.record("k2", {"total_ns": 2.0})
+    b.publish()
+    fresh = RunJournal(backend=SharedDirBackend(root, writer_id="c"))
+    assert len(fresh) == 2
+    # later-wins by content key across shards
+    b.record("k1", {"total_ns": 7.0})
+    b.publish()
+    assert RunJournal(backend=SharedDirBackend(root)).get("k1")[
+        "total_ns"] == 7.0
+
+
+def test_shared_dir_backend_compact(tmp_path):
+    """Shared-dir compaction folds every shard into one and drops
+    superseded records; concurrent readers keep a complete view."""
+    from repro.dse import SharedDirBackend
+    root = str(tmp_path / "root")
+    a = RunJournal(backend=SharedDirBackend(root, writer_id="a"))
+    for i in range(3):
+        a.record("k1", {"total_ns": float(i)})
+        a.publish()                      # three shards, same key
+    a.record("k2", {"total_ns": 5.0})
+    a.publish()
+    reader = RunJournal(backend=SharedDirBackend(root, writer_id="r"))
+    before, after = a.compact()
+    assert (before, after) == (4, 2)
+    assert len(a.backend.shards()) == 1
+    assert a.get("k1")["total_ns"] == 2.0
+    # a pre-compact reader still refreshes to a complete view
+    reader.refresh()
+    assert reader.get("k1")["total_ns"] == 2.0
+    assert reader.get("k2")["total_ns"] == 5.0
 
 
 def test_point_key_content_identity():

@@ -1,0 +1,378 @@
+"""Distributed sweep subsystem tests (repro.dse.distrib).
+
+The heart of the suite is the differential contract of DESIGN.md
+Section 10: an N-worker distributed sweep over a shared directory must
+reproduce the single-host serial sweep's records and Pareto frontier
+*byte-identically*, for any N, and a resumed sweep must dispatch zero
+new mapping searches. Workers here run in threads (the protocol —
+shards, manifests, leases, stealing — is identical to process mode,
+which the CI smoke leg and the scaling benchmark exercise for real);
+searches run on a tiny conv chain so the module stays in the fast core
+loop.
+"""
+import json
+import os
+import threading
+import time
+
+import pytest
+
+from repro.core import LayerSpec, chain_edges
+from repro.dse import (DSEConfig, DistribConfig, RunJournal,
+                       SharedDirBackend, run_distributed, run_dse)
+from repro.dse.distrib import (LeaseBoard, WorkerConfig, batch_id_for,
+                               list_manifests, post_manifest,
+                               request_stop, stop_requested, worker_loop)
+from repro.dse.distrib.lease import ManifestCache
+from repro.dse.explore import key_for, proposal_stream
+from repro.dse.space import ParamSpace
+
+TINY_LAYERS = [
+    LayerSpec("l0", K=8, C=4, P=8, Q=8, R=3, S=3, pad=1),
+    LayerSpec("l1", K=8, C=8, P=8, Q=8, R=3, S=3, pad=1),
+]
+
+
+@pytest.fixture
+def tiny_net(monkeypatch):
+    """Patch the network lookup everywhere evaluations happen (serial
+    evaluator and worker loops share explore._search_arch)."""
+    import repro.dse.explore as ex
+
+    desc = type("D", (), {"layers": TINY_LAYERS,
+                          "edges": chain_edges(TINY_LAYERS)})()
+    monkeypatch.setattr(ex, "describe", lambda name: desc)
+
+
+def tiny_space() -> ParamSpace:
+    return ParamSpace(
+        family="dram_pim",
+        axes={
+            "channels_per_layer": (1, 2),
+            "banks_per_channel": (2, 4),
+            "columns_per_bank": (64, 128),
+        },
+        defaults={"channels_per_layer": 2, "banks_per_channel": 2,
+                  "columns_per_bank": 64},
+    )
+
+
+def tiny_dcfg(**kw) -> DSEConfig:
+    base = dict(network="tiny", mode="transform", budget=6,
+                n_candidates=3, max_steps=256, seed=0, explorer="evolve",
+                population=3)
+    base.update(kw)
+    return DSEConfig(**base)
+
+
+def strip_wall(rec):
+    return {k: v for k, v in rec.items() if k != "wall_s"}
+
+
+# ---------------------------------------------------------------------------
+# The differential contract: N workers == serial, bit-exactly.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_workers", [1, 2, 4])
+def test_distributed_matches_serial_bit_exactly(n_workers, tiny_net,
+                                                tmp_path):
+    sp = tiny_space()
+    dcfg = tiny_dcfg()
+    serial = run_dse(dcfg, space=sp, journal=RunJournal())
+    dist = DistribConfig(root=str(tmp_path / f"root{n_workers}"),
+                         n_workers=n_workers, worker_mode="thread",
+                         timeout_s=60.0)
+    res = run_distributed(dcfg, dist, space=sp)
+    assert res.stats["proposed"] == serial.stats["proposed"]
+    assert res.stats["evaluated"] == serial.stats["evaluated"]
+    # frontier: byte-identical canonical serialization
+    assert res.frontier.canonical_json() == serial.frontier.canonical_json()
+    # records: identical content in identical proposal order
+    # (wall_s is the one honest wall-clock field)
+    assert [strip_wall(r) for r in res.records] == \
+        [strip_wall(r) for r in serial.records]
+
+
+@pytest.mark.parametrize("explorer", ["grid", "random"])
+def test_distributed_one_shot_explorers_match_serial(explorer, tiny_net,
+                                                     tmp_path):
+    sp = tiny_space()
+    dcfg = tiny_dcfg(explorer=explorer, budget=5)
+    serial = run_dse(dcfg, space=sp, journal=RunJournal())
+    res = run_distributed(
+        dcfg, DistribConfig(root=str(tmp_path / "root"), n_workers=2,
+                            worker_mode="thread", timeout_s=60.0),
+        space=sp)
+    assert res.frontier.canonical_json() == serial.frontier.canonical_json()
+    assert [strip_wall(r) for r in res.records] == \
+        [strip_wall(r) for r in serial.records]
+
+
+def test_distributed_resume_dispatches_nothing(tiny_net, tmp_path):
+    """Re-running a finished sweep over the same shared dir serves every
+    point from the merged journal: zero manifests, zero evaluations."""
+    sp = tiny_space()
+    dcfg = tiny_dcfg()
+    root = str(tmp_path / "root")
+    first = run_distributed(
+        dcfg, DistribConfig(root=root, n_workers=2, worker_mode="thread",
+                            timeout_s=60.0), space=sp)
+    assert first.stats["evaluated"] == dcfg.budget
+    again = run_distributed(
+        dcfg, DistribConfig(root=root, n_workers=2, worker_mode="thread",
+                            timeout_s=60.0), space=sp)
+    assert again.stats["evaluated"] == 0
+    assert again.stats["from_journal"] == dcfg.budget
+    assert again.stats["batches"] == 0
+    assert again.frontier.canonical_json() == first.frontier.canonical_json()
+
+
+def test_distributed_external_mode_with_manual_worker(tiny_net, tmp_path):
+    """external worker_mode spawns nothing; a worker started separately
+    (here: a thread running the real worker_loop) supplies the compute."""
+    sp = tiny_space()
+    dcfg = tiny_dcfg(explorer="grid", budget=4)
+    root = str(tmp_path / "root")
+    os.makedirs(root, exist_ok=True)
+    t = threading.Thread(
+        target=worker_loop,
+        args=(WorkerConfig(root=root, worker_id="ext-0", poll_s=0.01),),
+        daemon=True)
+    t.start()
+    res = run_distributed(
+        dcfg, DistribConfig(root=root, n_workers=0, worker_mode="external",
+                            timeout_s=60.0), space=sp)
+    t.join(timeout=30.0)
+    assert not t.is_alive()          # STOP shut the external worker down
+    assert res.stats["evaluated"] == 4
+    ref = run_dse(dcfg, space=sp, journal=RunJournal())
+    assert res.frontier.canonical_json() == ref.frontier.canonical_json()
+
+
+# ---------------------------------------------------------------------------
+# Lease expiry / work stealing.
+# ---------------------------------------------------------------------------
+
+def test_lease_claim_release_and_done(tmp_path):
+    root = str(tmp_path)
+    a = LeaseBoard(root, "a", ttl_s=60.0)
+    b = LeaseBoard(root, "b", ttl_s=60.0)
+    assert a.try_claim("batch1")
+    assert not b.try_claim("batch1")      # live lease blocks peers
+    a.mark_done("batch1")
+    a.release("batch1")
+    assert not b.try_claim("batch1")      # done batches are never claimed
+    assert b.is_done("batch1")
+
+
+def test_expired_lease_is_stolen_exactly_once(tmp_path):
+    root = str(tmp_path)
+    dead = LeaseBoard(root, "dead", ttl_s=0.0)    # expires immediately
+    assert dead.try_claim("batch1")
+    b = LeaseBoard(root, "b", ttl_s=60.0)
+    c = LeaseBoard(root, "c", ttl_s=60.0)
+    got_b = b.try_claim("batch1")
+    got_c = c.try_claim("batch1")
+    assert got_b != got_c                 # exactly one thief wins
+    assert b.n_stolen + c.n_stolen == 1
+    winner = b if got_b else c
+    lease = winner.read_lease("batch1")
+    assert lease["worker"] == winner.worker_id
+    assert lease["expires_at"] > time.time()
+
+
+def test_killed_workers_batch_is_restolen_and_completed(tiny_net,
+                                                        tmp_path):
+    """The acceptance-criteria crash story: a worker claims a batch and
+    dies (its lease is never renewed); a live worker steals the expired
+    lease, re-evaluates, publishes, and the sweep completes."""
+    sp = tiny_space()
+    dcfg = tiny_dcfg(explorer="grid", budget=3)
+    root = str(tmp_path / "root")
+    os.makedirs(root, exist_ok=True)
+
+    # post one batch manifest by hand, exactly as the coordinator would
+    pts = [sp.default()] + list(sp.enumerate())[:2]
+    import dataclasses as dc
+    items = []
+    for p in pts:
+        arch = sp.build(p)
+        items.append({"key": key_for(dcfg, arch.to_key()),
+                      "family": p.family, "point": p.as_dict(),
+                      "arch": arch.to_dict()})
+    bid = batch_id_for([it["key"] for it in items])
+    post_manifest(root, {"batch_id": bid, "dcfg": dc.asdict(dcfg),
+                         "items": items})
+
+    # the doomed worker claims with a tiny ttl... and dies silently
+    doomed = LeaseBoard(root, "doomed", ttl_s=0.05)
+    assert doomed.try_claim(bid)
+    time.sleep(0.06)                      # lease expires un-renewed
+
+    stats = worker_loop(WorkerConfig(root=root, worker_id="live",
+                                     poll_s=0.01, lease_ttl_s=30.0,
+                                     max_idle_s=0.5))
+    assert stats["stolen"] == 1
+    assert stats["evaluated"] == 3
+    board = LeaseBoard(root, "observer", ttl_s=1.0)
+    assert board.is_done(bid)
+    merged = RunJournal(backend=SharedDirBackend(root, writer_id="obs"))
+    assert all(it["key"] in merged for it in items)
+    # and the stolen work is bit-identical to a serial evaluation
+    ref = run_dse(dcfg, space=sp, journal=RunJournal())
+    by_key = {r["key"]: r for r in ref.records}
+    for it in items:
+        assert strip_wall(merged.get(it["key"])) == \
+            strip_wall(by_key[it["key"]])
+
+
+def test_worker_skips_batches_already_in_merged_journal(tiny_net,
+                                                        tmp_path):
+    """Dedup-before-work: if every key of a manifest is already in the
+    merged journal, a worker marks it done without evaluating."""
+    sp = tiny_space()
+    dcfg = tiny_dcfg(explorer="grid", budget=2)
+    root = str(tmp_path / "root")
+    # evaluate the sweep once, distributed, to fill the shared journal
+    run_distributed(dcfg, DistribConfig(root=root, n_workers=1,
+                                        worker_mode="thread",
+                                        timeout_s=60.0), space=sp)
+    # repost a manifest for already-journaled keys, with a fresh id
+    import dataclasses as dc
+    pts = [sp.default()]
+    arch = sp.build(pts[0])
+    items = [{"key": key_for(dcfg, arch.to_key()), "family": pts[0].family,
+              "point": pts[0].as_dict(), "arch": arch.to_dict()}]
+    bid = batch_id_for([it["key"] for it in items] + ["repost"])
+    os.remove(os.path.join(root, "STOP"))
+    post_manifest(root, {"batch_id": bid, "dcfg": dc.asdict(dcfg),
+                         "items": items})
+    stats = worker_loop(WorkerConfig(root=root, worker_id="dedup",
+                                     poll_s=0.01, max_idle_s=0.5))
+    assert stats["evaluated"] == 0
+    assert stats["skipped_done"] >= 1
+    assert LeaseBoard(root, "o", ttl_s=1.0).is_done(bid)
+
+
+# ---------------------------------------------------------------------------
+# Protocol plumbing.
+# ---------------------------------------------------------------------------
+
+def test_manifest_publish_and_cache(tmp_path):
+    root = str(tmp_path)
+    m1 = {"batch_id": "b1", "items": [], "dcfg": {}}
+    m2 = {"batch_id": "b2", "items": [], "dcfg": {}}
+    post_manifest(root, m1)
+    cache = ManifestCache(root)
+    assert [m["batch_id"] for m in cache.scan()] == ["b1"]
+    post_manifest(root, m2)
+    assert sorted(m["batch_id"] for m in cache.scan()) == ["b1", "b2"]
+    assert list_manifests(root) == cache.scan()
+
+
+def test_stop_protocol(tmp_path):
+    root = str(tmp_path)
+    assert not stop_requested(root)
+    request_stop(root)
+    assert stop_requested(root)
+    # a STOP already present when the worker starts is *stale* (left by
+    # a previous sweep on a reused dir): the worker must not exit on it,
+    # or workers started before their coordinator would die instantly
+    stats = worker_loop(WorkerConfig(root=root, worker_id="w",
+                                     poll_s=0.01, max_idle_s=0.3))
+    assert stats["evaluated"] == 0      # idled out, not stopped
+
+
+def test_fresh_stop_overrides_stale_one(tmp_path):
+    """A worker that started under a stale STOP still honors the *next*
+    STOP (fresh token) posted by its coordinator."""
+    root = str(tmp_path)
+    request_stop(root)                  # stale leftover
+    done = {}
+
+    def run():
+        done["stats"] = worker_loop(WorkerConfig(root=root, worker_id="w",
+                                                 poll_s=0.01))
+    t = threading.Thread(target=run, daemon=True)
+    t.start()
+    time.sleep(0.15)
+    assert t.is_alive()                 # ignoring the stale STOP
+    request_stop(root)                  # fresh token
+    t.join(timeout=10.0)
+    assert not t.is_alive()
+    assert done["stats"]["evaluated"] == 0
+
+
+def test_wedged_compute_gate_degrades_but_stays_live(tiny_net, tmp_path):
+    """A compute gate whose every holder crashed (slots never released)
+    must not wedge the fleet: after repeated failed acquires the worker
+    proceeds ungated, so leases still get stolen and work completes."""
+
+    class WedgedGate:                     # acquire never succeeds
+        def acquire(self, timeout=None):
+            return False
+
+        def release(self):                # pragma: no cover
+            raise AssertionError("released a slot it never acquired")
+
+    sp = tiny_space()
+    dcfg = tiny_dcfg(explorer="grid", budget=2)
+    root = str(tmp_path / "root")
+    os.makedirs(root, exist_ok=True)
+    import dataclasses as dc
+    items = []
+    for p in [sp.default()] + list(sp.enumerate())[:1]:
+        arch = sp.build(p)
+        items.append({"key": key_for(dcfg, arch.to_key()),
+                      "family": p.family, "point": p.as_dict(),
+                      "arch": arch.to_dict()})
+    bid = batch_id_for([it["key"] for it in items])
+    post_manifest(root, {"batch_id": bid, "dcfg": dc.asdict(dcfg),
+                         "items": items})
+    stats = worker_loop(WorkerConfig(root=root, worker_id="w",
+                                     poll_s=0.01, max_idle_s=0.5,
+                                     compute_gate=WedgedGate()))
+    assert stats["evaluated"] == len(items)
+    assert LeaseBoard(root, "o", ttl_s=1.0).is_done(bid)
+
+
+def test_batch_ids_are_content_keyed():
+    assert batch_id_for(["k1", "k2"]) == batch_id_for(["k1", "k2"])
+    assert batch_id_for(["k1", "k2"]) != batch_id_for(["k2", "k1"])
+
+
+def test_proposal_stream_protocol_enforced():
+    """next_batch/observe must alternate, and budgets are respected."""
+    sp = tiny_space()
+    stream = proposal_stream(sp, tiny_dcfg(explorer="grid", budget=4))
+    batch = stream.next_batch()
+    assert len(batch) == 4
+    with pytest.raises(AssertionError):
+        stream.next_batch()              # observe() first
+    stream.observe(batch, [{"point_key": p.key()} for p in batch])
+    assert stream.next_batch() is None
+
+
+def test_coordinator_raises_when_all_workers_die(tiny_net, tmp_path):
+    """A sweep whose local workers all exited with work outstanding must
+    fail loudly, not hang until the timeout."""
+
+    class DeadHandle:
+        def is_alive(self):
+            return False
+
+        def join(self, timeout=None):
+            pass
+
+    from repro.dse.distrib import coordinator as co
+    sp = tiny_space()
+    dcfg = tiny_dcfg(explorer="grid", budget=2)
+    dist = DistribConfig(root=str(tmp_path / "root"), n_workers=2,
+                         worker_mode="thread", timeout_s=60.0)
+    orig = co._spawn_workers
+    co._spawn_workers = lambda d: [DeadHandle()]
+    try:
+        with pytest.raises(RuntimeError, match="workers exited"):
+            run_distributed(dcfg, dist, space=sp)
+    finally:
+        co._spawn_workers = orig
