@@ -4,6 +4,7 @@ Entry points::
 
     python benchmarks/run.py [bench]            # paper-figure CSV suite
     python benchmarks/run.py dse [...]          # architecture DSE sweep
+    python benchmarks/run.py serve-dse [...]    # one mapping-service request
     python benchmarks/run.py dse-worker [...]   # join a distributed sweep
     python benchmarks/run.py dse-coordinator [...]  # drive one
 
@@ -19,6 +20,10 @@ the same sweep through the shared-dir work-stealing subsystem
 (``repro.dse.distrib``) with N local worker processes; the
 ``dse-worker``/``dse-coordinator`` pair does the same across real
 processes or machines sharing one directory (DESIGN.md Section 10).
+``serve-dse`` answers one deployment request through the mapping
+service (``repro.serve.MappingService``, DESIGN.md Section 11) — an
+HTTP-less local client whose repeat invocations are served from the
+service journal with zero new mapping searches.
 """
 import argparse
 import dataclasses
@@ -165,64 +170,16 @@ def _write_frontier(res, path) -> None:
 def dse_main(argv) -> None:
     args = _dse_parser().parse_args(argv)
     from benchmarks import record
-    from repro.dse import (best_arch_table, frontier_table, record_edp,
-                           run_dse, summarize, sweep_networks)
+    from repro.dse import (best_arch_table, execute_sweep, frontier_table,
+                           journal_template, objective_tag, shared_dir_for,
+                           summarize, sweep_networks, sweep_summary)
 
-    # one journal-naming scheme for both branches; a literal --journal
-    # path has no {placeholders} and formats to itself. Non-latency
-    # objectives journal separately (their records carry different
-    # chosen mappings and objective_value columns); blend is further
-    # tagged with its alpha so differently-weighted sweeps never share a
-    # journal file or a BENCH entry.
-    if args.objective == "latency":
-        obj_tag = ""
-    elif args.objective == "blend":
-        obj_tag = f"blend{args.blend_alpha:g}"
-    else:
-        obj_tag = args.objective
-    journal_template = args.journal or os.path.join(
-        "dse_runs", args.family + "_{network}_{mode}"
-        + (f"_{obj_tag}" if obj_tag else "") + ".jsonl")
-
-    def sweep_summary(res) -> dict:
-        best = res.best_within_area() or res.baseline
-        best_edp = res.best_by("edp_ns_pj") or res.baseline
-        return {
-            "explorer": res.config.explorer,
-            "objective": res.config.objective,
-            "blend_alpha": res.config.blend_alpha,
-            "budget": res.config.budget,
-            "evaluated": res.stats["evaluated"],
-            "from_journal": res.stats["from_journal"],
-            "frontier": res.stats["frontier"],
-            "wall_s": round(res.stats["wall_s"], 2),
-            "baseline_arch": res.baseline["arch_name"],
-            "baseline_total_ns": res.baseline["total_ns"],
-            "baseline_energy_pj": res.baseline["energy_pj"],
-            "baseline_edp_ns_pj": record_edp(res.baseline),
-            "best_iso_area_arch": best["arch_name"],
-            "best_iso_area_total_ns": best["total_ns"],
-            "best_iso_area_point": best["point"],
-            "best_edp_arch": best_edp["arch_name"],
-            "best_edp_ns_pj": record_edp(best_edp),
-            "best_edp_total_ns": best_edp["total_ns"],
-            "best_edp_energy_pj": best_edp["energy_pj"],
-            # True iff some frontier point beats the latency-only search
-            # on the default arch (the baseline) on EDP
-            "frontier_dominates_baseline_on_edp": any(
-                p.objectives[0] * p.objectives[1] < record_edp(res.baseline)
-                for p in res.frontier.points),
-            # the energy-aware frontier itself (latency/energy/area all
-            # minimized), so BENCH_search.json records the trade-off
-            "frontier_points": [
-                {"arch_name": (p.payload or {}).get("arch_name", p.key),
-                 "total_ns": p.objectives[0],
-                 "energy_pj": p.objectives[1],
-                 "area_mm2": p.objectives[2],
-                 "move_energy_pj": (p.payload or {}).get("move_energy_pj"),
-                 "edp_ns_pj": p.objectives[0] * p.objectives[1]}
-                for p in res.frontier.points],
-        }
+    # one journal-naming scheme for both branches (repro.dse.driver —
+    # shared with the mapping service); a literal --journal path has no
+    # {placeholders} and formats to itself
+    obj_tag = objective_tag(args.objective, args.blend_alpha)
+    template = args.journal or journal_template(
+        args.family, args.objective, args.blend_alpha)
 
     base = _dse_config_from_args(args)
 
@@ -237,7 +194,7 @@ def dse_main(argv) -> None:
             print("--distributed/--compact-journal/--frontier-out need "
                   "a single --network, not 'all'", file=sys.stderr)
             sys.exit(2)
-        base = dataclasses.replace(base, journal_path=journal_template)
+        base = dataclasses.replace(base, journal_path=template)
         results = sweep_networks(base)
         for (net, mode), res in sorted(results.items()):
             print(f"== {net} / {mode} ==")
@@ -248,11 +205,8 @@ def dse_main(argv) -> None:
         print(best_arch_table(results))
         return
 
-    journal_path = journal_template.format(network=args.network,
-                                           mode=args.mode)
-    shared_dir = args.shared_dir or (
-        journal_path[:-len(".jsonl")] if journal_path.endswith(".jsonl")
-        else journal_path) + ".shared"
+    journal_path = template.format(network=args.network, mode=args.mode)
+    shared_dir = args.shared_dir or shared_dir_for(journal_path)
 
     if args.compact_journal:
         if args.shared_dir or args.distributed:
@@ -263,22 +217,17 @@ def dse_main(argv) -> None:
 
     cfg = dataclasses.replace(base, network=args.network,
                               journal_path=journal_path)
+    res = execute_sweep(cfg, distributed=args.distributed,
+                        shared_dir=shared_dir if args.distributed else None,
+                        batch_size=args.batch_size,
+                        lease_ttl_s=args.lease_ttl)
+    print(summarize(res))
+    print(frontier_table(res.frontier))
     if args.distributed:
-        from repro.dse import DistribConfig, run_distributed
-        dist = DistribConfig(root=shared_dir, n_workers=args.distributed,
-                             batch_size=args.batch_size,
-                             lease_ttl_s=args.lease_ttl)
-        res = run_distributed(dataclasses.replace(cfg, journal_path=None),
-                              dist)
-        print(summarize(res))
-        print(frontier_table(res.frontier))
         print(f"dse: shared-dir={shared_dir} "
               f"workers={args.distributed} "
               f"batches={res.stats['batches']}")
     else:
-        res = run_dse(cfg)
-        print(summarize(res))
-        print(frontier_table(res.frontier))
         print(f"dse: journal={cfg.journal_path} entries={_journal_len(cfg)}")
     _write_frontier(res, args.frontier_out)
     record.update_dse(dse_key(args.network, args.mode),
@@ -351,10 +300,105 @@ def dse_coordinator_main(argv) -> None:
     _write_frontier(res, args.frontier_out)
 
 
+def serve_dse_main(argv) -> None:
+    """HTTP-less local client of the mapping service: build one
+    ``MappingRequest`` from flags (or ``--request-json``), answer it
+    through a ``MappingService`` over a persistent journal, and print
+    the response. Re-running an identical request is served from the
+    journal cache with zero new mapping searches (``served_from=journal
+    evaluated=0``)."""
+    import json
+    from repro.core.search import MODES, OBJECTIVES, STRATEGIES
+    from repro.dse import EXPLORERS, SPACES
+
+    p = argparse.ArgumentParser(
+        prog="run.py serve-dse",
+        description="Answer one deployment request ('best (arch, "
+                    "mapping) for this network under this budget') "
+                    "through the mapping service (repro.serve).")
+    p.add_argument("--network", default="resnet18")
+    p.add_argument("--family", default="dram_pim", choices=sorted(SPACES))
+    p.add_argument("--mode", default="transform", choices=MODES)
+    p.add_argument("--strategy", default="forward", choices=STRATEGIES)
+    p.add_argument("--objective", default="latency", choices=OBJECTIVES)
+    p.add_argument("--blend-alpha", type=float, default=0.5)
+    p.add_argument("--explorer", default="evolve", choices=EXPLORERS)
+    p.add_argument("--budget", type=int, default=16)
+    p.add_argument("--seed", type=int, default=1)
+    p.add_argument("--candidates", type=int, default=8)
+    p.add_argument("--max-steps", type=int, default=2048)
+    p.add_argument("--area-budget", type=float, default=None,
+                   metavar="MM2", help="only deploy archs within this "
+                   "area proxy (iso-area constraint)")
+    p.add_argument("--deadline", type=float, default=None, metavar="S",
+                   help="wall-clock bound; the response is the "
+                        "best-so-far frontier when it expires")
+    p.add_argument("--distributed", type=int, default=0, metavar="N",
+                   help="fan the sweep out over N local worker "
+                        "processes (large budgets)")
+    p.add_argument("--include-mapping", action="store_true",
+                   help="materialize the winner's per-layer loop nests "
+                        "into the response")
+    p.add_argument("--journal", default=None,
+                   help="service journal path (default: "
+                        "dse_runs/service.jsonl) — the cross-request "
+                        "result cache")
+    p.add_argument("--request-json", default=None, metavar="JSON",
+                   help="full request as a JSON object (overrides the "
+                        "per-field flags)")
+    p.add_argument("--json", action="store_true",
+                   help="print the full MappingResponse as JSON")
+    args = p.parse_args(argv)
+
+    from repro.dse.driver import JOURNAL_ROOT
+    from repro.serve import MappingRequest, MappingService
+    if args.request_json:
+        req = MappingRequest.from_dict(json.loads(args.request_json))
+    else:
+        req = MappingRequest(
+            network=args.network, family=args.family, mode=args.mode,
+            strategy=args.strategy, objective=args.objective,
+            blend_alpha=args.blend_alpha, explorer=args.explorer,
+            budget=args.budget, seed=args.seed,
+            n_candidates=args.candidates, max_steps=args.max_steps,
+            area_budget_mm2=args.area_budget, deadline_s=args.deadline,
+            distributed=args.distributed,
+            include_mapping=args.include_mapping)
+    journal = args.journal or os.path.join(JOURNAL_ROOT, "service.jsonl")
+    svc = MappingService(journal_path=journal)
+    try:
+        resp = svc.request(req)
+    finally:
+        svc.close()
+    print(f"serve-dse: request={resp.request_key[:12]} "
+          f"status={resp.status} served_from={resp.served_from} "
+          f"evaluated={resp.evaluated} from_journal={resp.from_journal} "
+          f"deadline_hit={resp.deadline_hit} wall_s={resp.wall_s:.1f}")
+    if resp.best is not None:
+        print(f"serve-dse: best {resp.best['arch_name']} "
+              f"latency_ms={resp.best['total_ns'] / 1e6:.3f} "
+              f"energy_J={resp.best['energy_pj'] / 1e12:.1f} "
+              f"area_mm2={resp.best['area_mm2']:.2f}")
+    else:
+        print("serve-dse: no scored arch fits the area budget "
+              f"({req.area_budget_mm2} mm2)")
+    print(f"serve-dse: frontier={len(resp.frontier_points)} points, "
+          f"journal={journal}")
+    if resp.mapping:
+        for lay in resp.mapping:
+            print(f"serve-dse: mapping {lay['layer']}: "
+                  f"latency_ns={lay['latency_ns']:.0f} "
+                  f"transformed={lay['transformed']}")
+    if args.json:
+        print(resp.to_json(indent=2))
+
+
 def main() -> None:
     argv = sys.argv[1:]
     if argv and argv[0] == "dse":
         dse_main(argv[1:])
+    elif argv and argv[0] == "serve-dse":
+        serve_dse_main(argv[1:])
     elif argv and argv[0] == "dse-worker":
         dse_worker_main(argv[1:])
     elif argv and argv[0] == "dse-coordinator":
@@ -363,7 +407,8 @@ def main() -> None:
         bench_main()
     else:
         print(f"unknown subcommand {argv[0]!r}; use 'bench', 'dse', "
-              "'dse-worker' or 'dse-coordinator'", file=sys.stderr)
+              "'serve-dse', 'dse-worker' or 'dse-coordinator'",
+              file=sys.stderr)
         sys.exit(2)
 
 

@@ -79,6 +79,7 @@ class DistribConfig:
         assert self.n_workers >= 0, "n_workers must be >= 0"
 
     def resolved_slots(self) -> Optional[int]:
+        """Effective compute-gate width (None = gate can never bind)."""
         slots = self.compute_slots
         if slots == 0:
             slots = os.cpu_count() or 1

@@ -66,6 +66,7 @@ def request_stop(root: str) -> None:
 
 
 def clear_stop(root: str) -> None:
+    """Remove a previous sweep's STOP marker (coordinator start-up)."""
     try:
         os.remove(os.path.join(root, STOP_NAME))
     except FileNotFoundError:
@@ -86,6 +87,8 @@ def stop_token(root: str) -> Optional[str]:
 
 
 def stop_requested(root: str) -> bool:
+    """True iff a STOP marker exists (any token — callers who must
+    distinguish sweeps compare the token themselves)."""
     return os.path.exists(os.path.join(root, STOP_NAME))
 
 
@@ -128,6 +131,8 @@ class ManifestCache:
         self._by_name: Dict[str, Dict] = {}
 
     def scan(self) -> List[Dict]:
+        """All manifests, sorted by name; immutable ones are read at
+        most once and served from the cache afterwards."""
         try:
             names = sorted(os.listdir(self._dir))
         except FileNotFoundError:
@@ -161,6 +166,8 @@ class LeaseBoard:
         return os.path.join(self.root, "done", f"{batch_id}.json")
 
     def is_done(self, batch_id: str) -> bool:
+        """True once the batch has a write-once done marker (cached —
+        done markers never disappear)."""
         if batch_id in self._done_cache:
             return True
         if os.path.exists(self._done_path(batch_id)):
@@ -169,6 +176,7 @@ class LeaseBoard:
         return False
 
     def read_lease(self, batch_id: str) -> Optional[Dict]:
+        """The batch's current lease body, or None if unclaimed."""
         return read_json(self._lease_path(batch_id))
 
     def try_claim(self, batch_id: str) -> bool:
@@ -230,6 +238,7 @@ class LeaseBoard:
             pass
 
     def mark_done(self, batch_id: str, meta: Optional[Dict] = None) -> None:
+        """Write the batch's done marker (write-once; atomic rename)."""
         body = {"worker": self.worker_id}
         if meta:
             body.update(meta)

@@ -55,6 +55,7 @@ class WorkerConfig:
     compute_gate: Optional[object] = None
 
     def resolved_id(self) -> str:
+        """The configured worker id, or a fresh pid-random one."""
         return self.worker_id or f"w{os.getpid()}-{uuid.uuid4().hex[:6]}"
 
 

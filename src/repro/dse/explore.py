@@ -89,6 +89,7 @@ class DSEConfig:
         assert self.budget >= 1, "budget must be >= 1"
 
     def search_config(self) -> SearchConfig:
+        """The per-point mapping-search config (always engine-backed)."""
         return SearchConfig(n_candidates=self.n_candidates, seed=self.seed,
                             max_steps=self.max_steps, mode=self.mode,
                             strategy=self.strategy,
@@ -145,6 +146,8 @@ def key_for(dcfg: DSEConfig, arch_key: str) -> str:
 
 def point_key(space: ParamSpace, point: DesignPoint,
               dcfg: DSEConfig) -> str:
+    """Journal key of one design point under one sweep config
+    (``key_for`` over the built ``ArchSpec``'s content key)."""
     return key_for(dcfg, space.build(point).to_key())
 
 
@@ -318,6 +321,7 @@ class ProposalStream:
         self._awaiting = False
 
     def next_batch(self) -> Optional[List[DesignPoint]]:
+        """Propose the next generation (``None`` = stream exhausted)."""
         assert not self._awaiting, \
             "observe() the previous batch before proposing the next"
         batch = self._propose()
@@ -329,6 +333,8 @@ class ProposalStream:
 
     def observe(self, points: Sequence[DesignPoint],
                 records: Sequence[Dict]) -> None:
+        """Feed back the scored records of the pending batch, in batch
+        order — the only channel from evaluation to later proposals."""
         assert self._awaiting, "observe() without a pending batch"
         assert len(points) == len(records)
         self._awaiting = False
@@ -467,11 +473,21 @@ def proposal_stream(space: ParamSpace, dcfg: DSEConfig) -> ProposalStream:
 
 
 def run_dse(dcfg: DSEConfig, space: Optional[ParamSpace] = None,
-            journal: Optional[RunJournal] = None) -> DSEResult:
+            journal: Optional[RunJournal] = None,
+            deadline_s: Optional[float] = None) -> DSEResult:
     """Run one sweep; returns records, the Pareto frontier and stats.
 
     The space default point is always proposed first, so every result
-    carries a baseline for iso-area comparisons."""
+    carries a baseline for iso-area comparisons.
+
+    ``deadline_s`` bounds the sweep's wall clock: scoring switches to
+    point-at-a-time and stops once the deadline passes, returning the
+    best-so-far frontier (``stats["deadline_hit"]`` is then True). The
+    baseline is always scored, deadline or not, so the result contract
+    holds. Because proposal and evaluation order are deterministic, a
+    deadline only truncates a deterministic evaluation sequence — and
+    journal hits are near-free, so a warm re-request replays the prefix
+    instantly and spends its deadline entirely on new points."""
     space = space or get_space(dcfg.family)
     journal = journal if journal is not None \
         else RunJournal(dcfg.journal_path)
@@ -479,16 +495,36 @@ def run_dse(dcfg: DSEConfig, space: Optional[ParamSpace] = None,
     frontier = ParetoFrontier()
     records: List[Dict] = []
     t0 = time.perf_counter()
+    deadline_hit = False
+
+    def expired() -> bool:
+        return (deadline_s is not None
+                and time.perf_counter() - t0 >= deadline_s)
+
     try:
         stream = proposal_stream(space, dcfg)
         while True:
+            # at least one point (the baseline) is always scored
+            if records and expired():
+                deadline_hit = True
+                break
             batch = stream.next_batch()
             if batch is None:
                 break
-            recs = ev(batch)
+            if deadline_s is None:
+                recs = ev(batch)
+            else:
+                recs = []
+                for p in batch:
+                    recs.append(ev([p])[0])
+                    if len(recs) < len(batch) and expired():
+                        deadline_hit = True
+                        break
             for p, rec in zip(batch, recs):
                 records.append(rec)
                 frontier.add_record(p.key(), rec)
+            if deadline_hit:
+                break   # partial batch: the stream is never observe()d
             stream.observe(batch, recs)
     finally:
         ev.close()
@@ -499,6 +535,7 @@ def run_dse(dcfg: DSEConfig, space: Optional[ParamSpace] = None,
         "from_journal": ev.n_from_journal,
         "frontier": len(frontier),
         "wall_s": time.perf_counter() - t0,
+        "deadline_hit": deadline_hit,
     }
     return DSEResult(config=dcfg, records=records, frontier=frontier,
                      baseline=baseline, stats=stats)

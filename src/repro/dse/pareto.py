@@ -57,6 +57,7 @@ class ParetoFrontier:
         return {p.key for p in self._points}
 
     def objectives_of(self, record: Dict) -> Tuple[float, ...]:
+        """This frontier's objective vector of an evaluation record."""
         return tuple(float(record[n]) for n in self.names)
 
     def add_record(self, key: str, record: Dict) -> bool:
@@ -83,6 +84,8 @@ class ParetoFrontier:
         return True
 
     def dominated(self, objectives: Sequence[float]) -> bool:
+        """True iff the frontier already dominates (or equals) the
+        given objective vector — ``add`` would reject it."""
         objs = tuple(float(v) for v in objectives)
         return any(dominates(p.objectives, objs) or p.objectives == objs
                    for p in self._points)

@@ -94,12 +94,16 @@ class JournalBackend:
     ``(lines_before, lines_after)``."""
 
     def load(self) -> Dict[str, Dict]:
+        """Full merged later-wins view, ``{content key: record}``."""
         raise NotImplementedError
 
     def append(self, rec: Dict) -> None:
+        """Stage one record for this writer."""
         raise NotImplementedError
 
     def publish(self) -> None:
+        """Make staged records visible to other readers (no-op where
+        appends already are)."""
         pass
 
     def load_new(self) -> Dict[str, Dict]:
@@ -109,6 +113,8 @@ class JournalBackend:
         return self.load()
 
     def compact(self) -> Tuple[int, int]:
+        """Rewrite the store to one line per key; returns
+        ``(lines_before, lines_after)``."""
         raise NotImplementedError(
             f"{type(self).__name__} does not support compaction")
 
@@ -128,6 +134,7 @@ class FileBackend(JournalBackend):
                     self._needs_newline = bf.read(1) != b"\n"
 
     def load(self) -> Dict[str, Dict]:
+        """Parse the file later-wins (truncated tail tolerated)."""
         out: Dict[str, Dict] = {}
         if os.path.exists(self.path):
             with open(self.path, "r", encoding="utf-8") as fh:
@@ -136,6 +143,8 @@ class FileBackend(JournalBackend):
         return out
 
     def append(self, rec: Dict) -> None:
+        """Append one JSON line, eagerly flushed (concurrent readers
+        and killed runs observe a prefix of complete lines)."""
         d = os.path.dirname(self.path)
         if d:
             os.makedirs(d, exist_ok=True)
@@ -190,6 +199,7 @@ class SharedDirBackend(JournalBackend):
 
     @property
     def shard_dir(self) -> str:
+        """Directory of the published (immutable) record shards."""
         return os.path.join(self.root, "shards")
 
     @property
@@ -201,6 +211,7 @@ class SharedDirBackend(JournalBackend):
         return os.path.join(self._staging_dir, f"{self.writer_id}.jsonl")
 
     def shards(self) -> List[str]:
+        """Published shard paths in sorted-name (merge) order."""
         try:
             names = sorted(os.listdir(self.shard_dir))
         except FileNotFoundError:
@@ -209,6 +220,8 @@ class SharedDirBackend(JournalBackend):
                 if n.endswith(".jsonl")]
 
     def load(self) -> Dict[str, Dict]:
+        """Full merge of every published shard (resets the incremental
+        ``load_new`` cursor)."""
         self._seen_shards = set()
         return self.load_new()
 
@@ -228,6 +241,7 @@ class SharedDirBackend(JournalBackend):
         return out
 
     def append(self, rec: Dict) -> None:
+        """Stage one record privately; ``publish`` makes it visible."""
         with open(self._staging_path, "a", encoding="utf-8") as fh:
             fh.write(json.dumps(rec, sort_keys=True) + "\n")
             fh.flush()
@@ -305,6 +319,7 @@ class RunJournal:
         return iter(self._records.values())
 
     def get(self, key: str) -> Optional[Dict]:
+        """The record stored under a content key, or None."""
         return self._records.get(key)
 
     def record(self, key: str, rec: Dict) -> Dict:

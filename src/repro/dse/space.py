@@ -43,9 +43,11 @@ class DesignPoint:
 
     @staticmethod
     def make(family: str, params: Params) -> "DesignPoint":
+        """Canonicalize a params dict into a ``DesignPoint``."""
         return DesignPoint(family, tuple(sorted(params.items())))
 
     def as_dict(self) -> Params:
+        """The point's parameters as a plain dict."""
         return dict(self.params)
 
     def key(self) -> str:
@@ -126,6 +128,7 @@ class ParamSpace:
     # -- membership ----------------------------------------------------------
 
     def is_valid(self, params: Params) -> bool:
+        """Full assignment, on-axis values, all constraints satisfied."""
         for name, value in params.items():
             if name not in self.axes or value not in self.axes[name]:
                 return False
@@ -134,12 +137,16 @@ class ParamSpace:
         return all(c(params) for c in self.constraints)
 
     def point(self, **params) -> DesignPoint:
+        """A validated point: the given params over the defaults
+        (raises ``ValueError`` for off-axis or constraint-violating
+        assignments)."""
         full = {**self.defaults, **params}
         if not self.is_valid(full):
             raise ValueError(f"invalid point for {self.family}: {full}")
         return DesignPoint.make(self.family, full)
 
     def default(self) -> DesignPoint:
+        """The space's baseline point (the factory-default config)."""
         return self.point()
 
     @property
@@ -294,6 +301,7 @@ SPACES: Dict[str, Callable[[], ParamSpace]] = {
 
 
 def get_space(family: str) -> ParamSpace:
+    """The shipped default space of an arch family (``SPACES``)."""
     try:
         return SPACES[family]()
     except KeyError:

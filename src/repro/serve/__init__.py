@@ -1,4 +1,16 @@
-"""Batched serving engine (prefill + decode with a fixed-size KV cache)."""
-from .engine import Engine, ServeConfig
+"""Serving subsystem: token generation and mapping-as-a-service.
 
-__all__ = ["Engine", "ServeConfig"]
+Two engines live here. ``Engine``/``ServeConfig`` (``serve.engine``) is
+the batched LM inference engine (prefill + decode with a fixed-size KV
+cache). ``MappingService`` (``serve.service``) is the deployment-time
+DSE service: a ``MappingRequest`` ("this network, this budget") in, the
+best (arch, mapping) pair and its Pareto frontier out — backed by the
+content-keyed run journal as a cross-request cache and a coalescing
+job queue (``serve.jobs``). See DESIGN.md Section 11.
+"""
+from .engine import Engine, ServeConfig
+from .jobs import Job, JobQueue
+from .service import MappingRequest, MappingResponse, MappingService
+
+__all__ = ["Engine", "ServeConfig", "Job", "JobQueue", "MappingRequest",
+           "MappingResponse", "MappingService"]

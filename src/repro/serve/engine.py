@@ -34,6 +34,9 @@ class ServeConfig:
 
 
 class Engine:
+    """Batched LM inference: jitted prefill + single-token decode loop
+    with greedy or temperature sampling (module docstring)."""
+
     def __init__(self, cfg: ModelConfig, params: PyTree, mesh=None,
                  scfg: Optional[ServeConfig] = None):
         self.cfg = cfg

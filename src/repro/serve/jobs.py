@@ -1,0 +1,133 @@
+"""Async job queue with request coalescing for the mapping service.
+
+A ``Job`` is one unit of background work identified by a content key;
+a ``JobQueue`` runs jobs on a small thread pool and **coalesces**
+submissions: while a job for key K is in flight (queued or running),
+every further ``submit`` with key K attaches to the same ``Job`` object
+instead of enqueueing duplicate work — N concurrent identical
+deployment requests cost one sweep. Once a job finishes it leaves the
+in-flight table; whether a *later* identical submission re-runs is the
+caller's concern (the mapping service answers it from its response
+memo and the run journal, so the re-run costs zero mapping searches).
+
+Threads, not processes: a DSE sweep is numpy/pure-Python compute that
+the service runs at most ``max_workers`` at a time, and results are
+plain dicts shared by reference. For process-scale parallelism the
+service dispatches through the distributed sweep subsystem instead
+(``repro.dse.distrib``).
+"""
+from __future__ import annotations
+
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Callable, Dict, Optional
+
+#: job lifecycle states (``Job.status``)
+PENDING, RUNNING, DONE, FAILED = "pending", "running", "done", "failed"
+
+
+class Job:
+    """Handle on one submitted unit of work.
+
+    ``result(timeout)`` blocks until completion and returns the value
+    (re-raising the job's exception if it failed); ``done()`` polls.
+    ``n_attached`` counts how many submissions this job absorbed — 1
+    for a lone request, more when concurrent identical requests were
+    coalesced onto it."""
+
+    def __init__(self, key: str):
+        self.key = key
+        self.status = PENDING
+        self.n_attached = 1
+        self._event = threading.Event()
+        self._result: Any = None
+        self._exc: Optional[BaseException] = None
+
+    @classmethod
+    def completed(cls, key: str, result: Any) -> "Job":
+        """A pre-finished job (memo hits: the answer already exists)."""
+        job = cls(key)
+        job._finish(result=result)
+        return job
+
+    def done(self) -> bool:
+        """True once the job has finished (successfully or not)."""
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> Any:
+        """Block until the job finishes; return its value or re-raise
+        its exception. Raises ``TimeoutError`` on expiry."""
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"job {self.key} not done in {timeout}s")
+        if self._exc is not None:
+            raise self._exc
+        return self._result
+
+    def _finish(self, result: Any = None,
+                exc: Optional[BaseException] = None) -> None:
+        self._result = result
+        self._exc = exc
+        self.status = FAILED if exc is not None else DONE
+        self._event.set()
+
+
+class JobQueue:
+    """Keyed thread-pool executor with in-flight coalescing."""
+
+    def __init__(self, max_workers: int = 1):
+        self._pool = ThreadPoolExecutor(max_workers=max_workers,
+                                        thread_name_prefix="mapping-job")
+        self._lock = threading.Lock()
+        self._inflight: Dict[str, Job] = {}
+        self.n_submitted = 0
+        self.n_coalesced = 0
+
+    def submit(self, key: str, fn: Callable[[], Any]) -> "tuple[Job, bool]":
+        """Enqueue ``fn`` under ``key``; returns ``(job, coalesced)``.
+        An in-flight job with the same key is returned (``coalesced``
+        True) instead of enqueueing a duplicate — ``fn`` is then never
+        called. The flag is this call's own outcome, so callers never
+        have to read the shared counters racily."""
+        with self._lock:
+            self.n_submitted += 1
+            job = self._inflight.get(key)
+            if job is not None:
+                job.n_attached += 1
+                self.n_coalesced += 1
+                return job, True
+            job = Job(key)
+            self._inflight[key] = job
+        try:
+            self._pool.submit(self._run, job, fn)
+        except BaseException as e:
+            # e.g. submit after shutdown: never leak an unfinishable
+            # PENDING job that later identical submits would hang on
+            with self._lock:
+                self._inflight.pop(key, None)
+            job._finish(exc=e)
+            raise
+        return job, False
+
+    def inflight(self) -> int:
+        """How many distinct keys are currently queued or running."""
+        with self._lock:
+            return len(self._inflight)
+
+    def shutdown(self, wait: bool = True) -> None:
+        """Stop accepting work and (optionally) drain running jobs."""
+        self._pool.shutdown(wait=wait)
+
+    def _run(self, job: Job, fn: Callable[[], Any]) -> None:
+        job.status = RUNNING
+        try:
+            result = fn()
+        except BaseException as e:  # surfaced via Job.result
+            job._finish(exc=e)
+        else:
+            job._finish(result=result)
+        finally:
+            # drop from the table only after the result is readable, so
+            # a racing submit either coalesces onto a finished job
+            # (result() returns immediately) or starts a fresh one
+            with self._lock:
+                self._inflight.pop(job.key, None)

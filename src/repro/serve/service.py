@@ -1,0 +1,336 @@
+"""Mapping-as-a-service: deployment requests answered by the DSE stack.
+
+The paper's pitch is that overlap-driven search is fast enough to use
+*on demand*; NicePIM/PIMSYN frame the same capability as a
+deployment-time service — "best PIM config for this network under this
+budget". ``MappingService`` is that service, HTTP-less by design: a
+``MappingRequest`` (network, arch family, objective, optional area
+budget and wall-clock deadline) in, a ``MappingResponse`` (the best
+(arch, mapping) pair plus the full latency/energy/area Pareto
+frontier) out. Transport is someone else's problem — both dataclasses
+round-trip through plain dicts/JSON, and ``benchmarks/run.py
+serve-dse`` is the local client. See DESIGN.md Section 11.
+
+Three layers make repeat traffic cheap:
+
+* **Response memo** — an exact repeat of a completed request (same
+  ``cache_key``) returns the stored ``MappingResponse`` without
+  touching the queue.
+* **Run journal** — all sweeps share one content-keyed ``RunJournal``
+  (keys embed network/mode/strategy/seed/search budget/arch, so
+  heterogeneous requests coexist in one store). A warm request — after
+  a restart, from a second service instance on the same path, or a
+  *bigger-budget* variant of an earlier request — re-proposes its
+  points and serves every already-scored one from the journal with
+  zero new mapping searches.
+* **Request coalescing** — concurrent identical requests attach to one
+  in-flight job (``repro.serve.jobs``) and share a single sweep.
+
+Determinism: sweeps are seed-deterministic and journal records are
+content-keyed, so the same request always yields a byte-identical
+``frontier_json`` (the ``ParetoFrontier.canonical_json`` artifact) —
+whether scored fresh, replayed from the journal, or coalesced.
+Deadline requests truncate a deterministic evaluation order, so their
+frontiers converge to the full-budget answer as the journal warms.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import threading
+from typing import Dict, List, Optional
+
+from ..dse.driver import (JOURNAL_ROOT, execute_sweep, frontier_points,
+                          sweep_summary)
+from ..dse.explore import DSEConfig, DSEResult
+from ..dse.persist import RunJournal
+from ..dse.space import ParamSpace, get_space
+from .jobs import Job, JobQueue
+
+
+@dataclasses.dataclass(frozen=True)
+class MappingRequest:
+    """One deployment request: "best (arch, mapping) for this network".
+
+    The scoring-relevant fields mirror ``DSEConfig``; on top of them
+    ``area_budget_mm2`` constrains the winner (iso-area deployment),
+    ``deadline_s`` bounds the request's wall clock (best-so-far answer),
+    ``distributed`` fans the sweep out over N local worker processes,
+    and ``include_mapping`` materializes the winning arch's per-layer
+    loop nests into the response (one extra deterministic mapping
+    search the first time a winner is seen — cached per winning arch
+    afterwards, shared across requests; it runs *after* the sweep, so
+    it is not bounded by ``deadline_s`` and not counted in
+    ``evaluated``)."""
+
+    network: str
+    family: str = "dram_pim"
+    mode: str = "transform"
+    strategy: str = "forward"
+    objective: str = "latency"
+    blend_alpha: float = 0.5
+    explorer: str = "evolve"
+    budget: int = 16
+    seed: int = 1
+    n_candidates: int = 8
+    max_steps: int = 2048
+    area_budget_mm2: Optional[float] = None
+    deadline_s: Optional[float] = None
+    distributed: int = 0
+    include_mapping: bool = False
+
+    def __post_init__(self):
+        self.dse_config()   # delegate field validation to DSEConfig
+        if self.deadline_s is not None and self.deadline_s < 0:
+            raise ValueError("deadline_s must be >= 0")
+        if self.deadline_s is not None and self.distributed:
+            raise ValueError("deadline_s is serial-only; drop it or "
+                             "drop distributed")
+
+    def dse_config(self) -> DSEConfig:
+        """The sweep this request asks for (journal-less: the service
+        supplies its own shared journal)."""
+        return DSEConfig(
+            family=self.family, network=self.network, mode=self.mode,
+            strategy=self.strategy, explorer=self.explorer,
+            budget=self.budget, seed=self.seed,
+            n_candidates=self.n_candidates, max_steps=self.max_steps,
+            objective=self.objective, blend_alpha=self.blend_alpha)
+
+    def to_dict(self) -> Dict:
+        """Plain-dict wire form (JSON-safe)."""
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "MappingRequest":
+        """Inverse of ``to_dict``; unknown keys are an error (a typo'd
+        constraint silently ignored would be a wrong deployment)."""
+        fields = {f.name for f in dataclasses.fields(cls)}
+        unknown = sorted(set(d) - fields)
+        if unknown:
+            raise ValueError(f"unknown request fields: {unknown}")
+        return cls(**d)
+
+    def cache_key(self) -> str:
+        """Content identity of the request — the memo/coalescing key.
+        Every field enters (two requests differing only in deadline or
+        response shape must not share a memoized response)."""
+        blob = json.dumps(self.to_dict(), sort_keys=True,
+                          separators=(",", ":"))
+        return hashlib.sha1(blob.encode()).hexdigest()
+
+
+@dataclasses.dataclass
+class MappingResponse:
+    """The service's answer: winner, baseline, frontier, provenance.
+
+    ``best`` is the full evaluation record of the chosen (arch, mapping)
+    pair — ``None`` with ``status="infeasible"`` when no scored point
+    fits ``area_budget_mm2``. ``frontier_json`` is the canonical
+    frontier serialization (byte-identical across repeats — THE
+    determinism artifact); ``served_from`` records how the answer was
+    produced (``search`` / ``journal`` / ``memo``); ``summary`` is the
+    ``sweep_summary`` dict minus ``frontier_points``, which is carried
+    once, top-level."""
+
+    request_key: str
+    status: str                       # "ok" | "infeasible"
+    network: str
+    family: str
+    objective: str
+    best: Optional[Dict]
+    baseline: Dict
+    frontier_points: List[Dict]
+    frontier_json: str
+    summary: Dict
+    evaluated: int
+    from_journal: int
+    proposed: int
+    deadline_hit: bool
+    wall_s: float
+    served_from: str
+    mapping: Optional[List[Dict]] = None
+
+    def to_dict(self) -> Dict:
+        """Plain-dict wire form (JSON-safe)."""
+        return dataclasses.asdict(self)
+
+    def to_json(self, indent: Optional[int] = None) -> str:
+        """JSON wire form of ``to_dict``."""
+        return json.dumps(self.to_dict(), sort_keys=True, indent=indent)
+
+
+class MappingService:
+    """Request/response engine over the DSE stack (module docstring).
+
+    One instance owns one ``RunJournal`` (``journal_path``; in-memory
+    when None — tests, throwaway services), a response memo, and a
+    ``JobQueue`` of ``max_workers`` sweep threads. ``space_overrides``
+    maps family names to caller-built ``ParamSpace``s (restricted
+    search spaces, tests); families not overridden resolve through
+    ``repro.dse.space.get_space``. ``shared_root`` hosts the per-request
+    shared directories of ``distributed`` requests (each request key
+    gets its own, so concurrent distributed sweeps never share a STOP
+    file, while identical re-requests reuse their shards)."""
+
+    def __init__(self, journal_path: Optional[str] = None,
+                 journal: Optional[RunJournal] = None,
+                 max_workers: int = 1,
+                 space_overrides: Optional[Dict[str, ParamSpace]] = None,
+                 shared_root: Optional[str] = None):
+        assert journal_path is None or journal is None, \
+            "pass a journal_path or a journal, not both"
+        self.journal = journal if journal is not None \
+            else RunJournal(journal_path)
+        self.shared_root = shared_root or os.path.join(
+            JOURNAL_ROOT, "service_shared")
+        self._spaces = dict(space_overrides or {})
+        self._memo: Dict[str, MappingResponse] = {}
+        # materialized loop nests, keyed by the winning record's journal
+        # content key — deterministic, so one search serves every
+        # request (deadline repeats, warm restarts) that picks the same
+        # (network, search config, arch) winner
+        self._mappings: Dict[str, List[Dict]] = {}
+        self._queue = JobQueue(max_workers=max_workers)
+        self._lock = threading.Lock()
+        self.stats = {"requests": 0, "memo_hits": 0, "coalesced": 0,
+                      "sweeps": 0}
+
+    # -- client surface -----------------------------------------------------
+
+    def submit(self, req: MappingRequest) -> Job:
+        """Enqueue a request; returns immediately with a ``Job`` whose
+        ``result()`` is the ``MappingResponse``. Memoized requests get
+        a pre-completed job; identical in-flight requests coalesce."""
+        key = req.cache_key()
+        with self._lock:
+            self.stats["requests"] += 1
+            memo = self._memo.get(key)
+        if memo is not None:
+            with self._lock:
+                self.stats["memo_hits"] += 1
+            return Job.completed(key, dataclasses.replace(
+                memo, served_from="memo"))
+        job, coalesced = self._queue.submit(key,
+                                            lambda: self._run(req, key))
+        if coalesced:
+            with self._lock:
+                self.stats["coalesced"] += 1
+        return job
+
+    def request(self, req: MappingRequest,
+                timeout: Optional[float] = None) -> MappingResponse:
+        """Blocking convenience: ``submit(req).result(timeout)``."""
+        return self.submit(req).result(timeout)
+
+    def close(self) -> None:
+        """Drain in-flight sweeps and stop the worker threads."""
+        self._queue.shutdown(wait=True)
+
+    # -- internals ----------------------------------------------------------
+
+    def _space(self, family: str) -> ParamSpace:
+        return self._spaces.get(family) or get_space(family)
+
+    def _run(self, req: MappingRequest, key: str) -> MappingResponse:
+        with self._lock:
+            self.stats["sweeps"] += 1
+        cfg = req.dse_config()
+        if req.distributed > 0:
+            if req.family in self._spaces:
+                raise ValueError("space_overrides are serial-only "
+                                 "(spaces do not pickle to workers)")
+            res = execute_sweep(
+                cfg, distributed=req.distributed,
+                shared_dir=os.path.join(self.shared_root, key[:16]))
+            self._absorb(res)
+        else:
+            res = execute_sweep(cfg, space=self._space(req.family),
+                                journal=self.journal,
+                                deadline_s=req.deadline_s)
+        resp = self._respond(req, key, res)
+        # deadline-truncated answers are NOT memoized: a repeat must
+        # re-run (replaying the journal prefix near-free) so repeated
+        # deadline requests make monotone progress toward the
+        # full-budget frontier instead of freezing at the first cut
+        if not resp.deadline_hit:
+            with self._lock:
+                self._memo[key] = resp
+        return resp
+
+    def _absorb(self, res: DSEResult) -> None:
+        """Merge a distributed sweep's records into the service journal
+        so later serial requests reuse them (records carry their
+        content key; re-absorbing an existing key is skipped to keep
+        the journal file from accreting duplicates)."""
+        for rec in res.records:
+            if rec["key"] not in self.journal:
+                self.journal.record(rec["key"], rec)
+        self.journal.publish()
+
+    def _best(self, req: MappingRequest, res: DSEResult) -> Optional[Dict]:
+        """The winning record: lowest search-objective value, restricted
+        to the area budget when one is given (None if nothing fits)."""
+        eligible = res.records
+        if req.area_budget_mm2 is not None:
+            eligible = [r for r in eligible
+                        if r["area_mm2"] <= req.area_budget_mm2 + 1e-12]
+        return min(eligible,
+                   key=lambda r: r.get("objective_value", r["total_ns"]),
+                   default=None)
+
+    def _respond(self, req: MappingRequest, key: str,
+                 res: DSEResult) -> MappingResponse:
+        best = self._best(req, res)
+        mapping = None
+        if req.include_mapping and best is not None:
+            mapping = self._mappings.get(best["key"])
+            if mapping is None:
+                mapping = self._materialize_mapping(req, best)
+                self._mappings[best["key"]] = mapping
+        # the frontier is carried once, top-level; the summary keeps
+        # every other sweep_summary column (the BENCH-compatible shape)
+        summary = dict(sweep_summary(res))
+        pts = summary.pop("frontier_points")
+        return MappingResponse(
+            request_key=key,
+            status="ok" if best is not None else "infeasible",
+            network=req.network, family=req.family,
+            objective=req.objective,
+            best=best, baseline=res.baseline,
+            frontier_points=pts,
+            frontier_json=res.frontier.canonical_json(),
+            summary=summary,
+            evaluated=int(res.stats["evaluated"]),
+            from_journal=int(res.stats["from_journal"]),
+            proposed=int(res.stats["proposed"]),
+            deadline_hit=bool(res.stats.get("deadline_hit", False)),
+            wall_s=float(res.stats["wall_s"]),
+            served_from="journal" if res.stats["evaluated"] == 0
+            else "search",
+            mapping=mapping)
+
+    def _materialize_mapping(self, req: MappingRequest,
+                             best: Dict) -> List[Dict]:
+        """Re-derive the winner's per-layer loop nests. Deterministic —
+        the same search that scored the record — so the nests *are* the
+        scored mapping; costs one extra mapping search on a cold
+        request (the memo answers repeats)."""
+        from ..core.engine import optimize_network_engine
+        from ..core.interface import describe
+        space = self._space(req.family)
+        arch = space.build(space.point(**best["point"]))
+        desc = describe(req.network)
+        cfg = req.dse_config()
+        net = optimize_network_engine(desc.layers, desc.edges, arch,
+                                      cfg.search_config())
+        return [
+            {"layer": getattr(lr.mapping.layer, "name", f"layer{i}"),
+             "nest": lr.mapping.pretty(),
+             "latency_ns": float(lr.latency_ns),
+             "energy_pj": float(lr.energy_pj),
+             "transformed": bool(lr.transformed),
+             "moved_frac": float(lr.moved_frac)}
+            for i, lr in enumerate(net.layers)]

@@ -1,0 +1,29 @@
+"""Tier-1 mirror of the docstring-coverage gate.
+
+``benchmarks/check_docstrings.py`` is the CI script; this test runs the
+same check inside the tier-1 suite so a public DSE/serve name without a
+docstring fails locally before it fails in CI. The script is loaded by
+file path (not ``sys.path``) so ``benchmarks/`` modules never shadow
+test imports.
+"""
+import importlib.util
+import os
+
+_SCRIPT = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "benchmarks", "check_docstrings.py")
+
+
+def _load_checker():
+    spec = importlib.util.spec_from_file_location("check_docstrings",
+                                                  _SCRIPT)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_public_api_docstring_coverage():
+    checker = _load_checker()
+    gaps = checker.missing_docstrings(checker.MODULES)
+    assert not gaps, (
+        "public names lack docstrings (see benchmarks/"
+        "check_docstrings.py):\n  " + "\n  ".join(gaps))
