@@ -59,6 +59,14 @@ def update_rows(rows: Dict[str, Dict], path: str = BENCH_JSON) -> None:
     _dump(data, path)
 
 
+def get_row(name: str, path: str = BENCH_JSON) -> Dict:
+    """The incumbent row (``{}`` if absent) — read *before* overwriting
+    it, so a bench can report its speedup against the committed value
+    (e.g. the batched scorer's sustained-throughput row derives its
+    speedup from the pre-PR engine row it replaces)."""
+    return _load(path)["rows"].get(name, {})
+
+
 def update_frontier(key: str, points, path: str = BENCH_JSON) -> None:
     """Replace the objective-frontier point list under ``frontier[key]``
     (``key`` is ``<network>/<arch>``; one point per search objective)."""

@@ -92,6 +92,63 @@ def rect_bounds(mapping: Mapping, dims=DIMS):
     return lo, hi
 
 
+def rect_bounds_stacked(mappings, dims=DIMS):
+    """``rect_bounds`` for K candidate mappings, stacked along a leading
+    candidate axis: per dim one 1-D concatenation of the flattened
+    ``(n_banks * n_steps)`` rect corners of every candidate, plus the
+    slice offsets delimiting each candidate's segment. The batched engine
+    runs coordinate maps and digit scans once over the concatenation
+    instead of per candidate — elementwise ops on the stack are
+    bit-identical to the per-candidate grids."""
+    sizes = [m.n_banks * m.n_steps for m in mappings]
+    offsets = np.concatenate([[0], np.cumsum(sizes)]).astype(np.int64)
+    total = int(offsets[-1])
+    lo = {d: np.empty(total, dtype=np.int64) for d in dims}
+    hi = {d: np.empty(total, dtype=np.int64) for d in dims}
+    for k, m in enumerate(mappings):
+        l, h = rect_bounds(m, dims)
+        o0, o1 = offsets[k], offsets[k + 1]
+        for d in dims:
+            lo[d][o0:o1] = l[d].reshape(-1)
+            hi[d][o0:o1] = h[d].reshape(-1)
+    return lo, hi, offsets
+
+
+def rect_bounds_separable_stacked(mappings, dims=DIMS):
+    """``rect_bounds_separable`` for K candidate mappings, stacked: per dim
+    the bank parts of all candidates concatenated (offsets ``boff``) and
+    the step parts concatenated (offsets ``toff``), plus each candidate's
+    extent dict. One allocation per dim serves the whole batch and the
+    engine's class/interval dedup runs pooled over the concatenation."""
+    nbs = [m.n_banks for m in mappings]
+    nts = [m.n_steps for m in mappings]
+    boff = np.concatenate([[0], np.cumsum(nbs)]).astype(np.int64)
+    toff = np.concatenate([[0], np.cumsum(nts)]).astype(np.int64)
+    bank_part = {d: np.zeros(int(boff[-1]), dtype=np.int64) for d in dims}
+    step_part = {d: np.zeros(int(toff[-1]), dtype=np.int64) for d in dims}
+    aranges: Dict[int, np.ndarray] = {}
+    for k, m in enumerate(mappings):
+        nb, nt = nbs[k], nts[k]
+        steps = aranges.get(nt)
+        if steps is None:
+            steps = aranges[nt] = np.arange(nt, dtype=np.int64)
+        banks = aranges.get(nb)
+        if banks is None:
+            banks = aranges[nb] = np.arange(nb, dtype=np.int64)
+        b0, t0 = int(boff[k]), int(toff[k])
+        for lp, blk, tstride, bstride in m.rect_loops:
+            if lp.dim not in bank_part:
+                continue
+            if lp.spatial:
+                bank_part[lp.dim][b0:b0 + nb] += (
+                    (banks // bstride) % lp.size) * blk
+            else:
+                step_part[lp.dim][t0:t0 + nt] += (
+                    (steps // tstride) % lp.size) * blk
+    extents = [{d: m.tile_extent[d] for d in dims} for m in mappings]
+    return bank_part, step_part, extents, boff, toff
+
+
 def rect_bounds_separable(mapping: Mapping, dims=DIMS):
     """Factored form of ``rect_bounds``: per dim ``d`` the lower corner is
     ``bank_part[d][b] + step_part[d][t]`` (spatial loops index only the

@@ -53,17 +53,23 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .arch import ArchSpec
-from .dataspace import rect_bounds, rect_bounds_separable
+from .dataspace import (rect_bounds, rect_bounds_separable,
+                        rect_bounds_stacked)
 from .mapping import Mapping
 from .overlap import (Edge, IdentityMap, CoordMap, digit_scan,
                       overlapped_end, rect_loop_groups, schedule_with_ready,
-                      stream_tail_fraction)
+                      stream_tail_fraction, stream_tail_fractions)
 from .perf_model import LayerPerf, PerfCache
 from .search import (LayerResult, NetworkResult, SearchConfig,
                      _consumers_of, _visit_order, candidates,
                      combine_objective)
-from .transform import transform_schedule
+from .transform import transform_end_grouped, transform_schedule
 from .workload import LayerSpec, OUTPUT_DIMS
+
+# class-grid cells above which the batched identity scorer falls back to
+# the dense per-candidate path (pathological mappings whose class product
+# approaches the full (banks x steps x steps) grid)
+_GRID_GUARD = 1 << 19
 
 
 def _unique_inverse(codes: np.ndarray, bound: int):
@@ -111,7 +117,7 @@ class _ArchCaches:
     unique per arch, so every per-mapping cache lives in a bundle)."""
 
     __slots__ = ("tiles", "tsep", "tail", "proj", "sepproj", "ready",
-                 "ranks", "score")
+                 "ranks", "score", "sepcls", "clsr0")
 
     def __init__(self):
         self.tiles: Dict = {}    # mapping key -> (lo, hi) rect dicts
@@ -122,6 +128,33 @@ class _ArchCaches:
         self.ready: Dict = {}    # (producer key, consumer key, cmap key)
         self.ranks: Dict = {}    # id(LayerResult) -> finish-step ranks
         self.score: Dict = {}    # scoring-context key -> pinned score
+        self.sepcls: Dict = {}   # (consumer key, cmap key) -> _SepClasses
+        self.clsr0: Dict = {}    # (consumer key, cmap key, P, Q) -> r0 grid
+
+
+class _SepClasses:
+    """Factored class structure of one consumer mapping under an
+    ``IdentityMap`` edge (producer-mapping-free, cached per (consumer,
+    cmap) — the batched scorer's unit of reuse, DESIGN.md Section 6).
+
+    Per producer output dim ``d`` in (K, P, Q) the projected interval of a
+    consumer tile is ``bank_val + step_lo + [0, cst]``; ``tvals[d]`` holds
+    the distinct step-lo values (ascending). ``jbmap`` maps each original
+    bank to its *joint* bank class (distinct (K, P, Q) bank-value triple);
+    ``bvj[d]`` is that class's bank value per dim. ``wjoint[kK, kP, kQ]``
+    is the exact number of time steps whose (K, P, Q) step-lo classes are
+    that combination — the per-dim step classes depend on disjoint
+    temporal digit groups ({C}, {P,R}, {Q,S}), so the joint distribution
+    is the product measure ``count_K x count_P x count_Q x (n_steps /
+    prod(group sizes))`` (exact integer division: step counts factor over
+    the free digits). ``wflat`` (lazy) is ``wjoint`` flattened and tiled
+    over the joint bank classes, matching a C-order raveled class grid.
+    ``tmin[d]`` (lazy, overlap mode only) is the minimum temporal partial
+    step index per class; ``scodes`` caches per (dim, producer-dim-size)
+    the clipped scan-interval codes."""
+
+    __slots__ = ("tvals", "cst", "bvj", "jbmap", "wjoint", "wflat",
+                 "cells", "tmin", "scodes")
 
 
 class OverlapEngine:
@@ -136,6 +169,22 @@ class OverlapEngine:
         self._bundles: Dict[str, _ArchCaches] = {}
         self._cur = _ArchCaches()
         self._arch: Optional[ArchSpec] = None
+        # pure-arithmetic memos (arch-independent): arange(n) and the
+        # digit-contribution arrays arange(size) * weight
+        self._ar: Dict[int, np.ndarray] = {}
+        self._dc: Dict = {}
+
+    def _arange(self, n: int) -> np.ndarray:
+        a = self._ar.get(n)
+        if a is None:
+            a = self._ar[n] = np.arange(n, dtype=np.int64)
+        return a
+
+    def _digit_contrib(self, size: int, w: int) -> np.ndarray:
+        a = self._dc.get((size, w))
+        if a is None:
+            a = self._dc[(size, w)] = self._arange(size) * w
+        return a
 
     # -- memoized primitives -------------------------------------------------
 
@@ -207,6 +256,38 @@ class OverlapEngine:
                    for d in OUTPUT_DIMS}
             hit = self._cur.proj[key] = (plo, phi, ready0)
         return hit
+
+    def _projection_batch(self, reps: Sequence[Mapping], cmap: CoordMap,
+                          p_layer: LayerSpec):
+        """``projection`` for several consumer candidates of one layer in
+        one pass: rect bounds are stacked along the candidate axis
+        (``rect_bounds_stacked``), the coordinate map and clips run once on
+        the concatenation (elementwise, so bit-identical per candidate) and
+        each candidate's slice is cached under its ``projection`` key."""
+        ck = cmap.key()
+        out: List = [self._cur.proj.get((m.cache_key, ck, p_layer))
+                     for m in reps]
+        miss = [k for k in range(len(reps)) if out[k] is None]
+        if not miss:
+            return out
+        mm = [reps[k] for k in miss]
+        lo, hi, offs = rect_bounds_stacked(mm)
+        plo, phi, ready0 = cmap.to_producer(p_layer, mm[0].layer, lo, hi)
+        plo = {d: np.clip(plo[d], 0, p_layer.dim(d) - 1)
+               for d in OUTPUT_DIMS}
+        phi = {d: np.clip(phi[d], 1, p_layer.dim(d))
+               for d in OUTPUT_DIMS}
+        ready0 = np.broadcast_to(ready0, plo["K"].shape)
+        for x, k in enumerate(miss):
+            m = mm[x]
+            o0, o1 = int(offs[x]), int(offs[x + 1])
+            shp = (m.n_banks, m.n_steps)
+            hit = ({d: plo[d][o0:o1].reshape(shp) for d in OUTPUT_DIMS},
+                   {d: phi[d][o0:o1].reshape(shp) for d in OUTPUT_DIMS},
+                   ready0[o0:o1].reshape(shp))
+            self._cur.proj[(m.cache_key, ck, p_layer)] = hit
+            out[k] = hit
+        return out
 
     def tiles_sep(self, m: Mapping):
         self._check_arch(m)
@@ -326,6 +407,351 @@ class OverlapEngine:
             total = total + best[inv_b[:, None], inv_t[None, :]]
         return total.astype(np.int64), ready0
 
+    # -- batched identity-edge scoring (class histograms) --------------------
+
+    def _sep_classes_batch(self, cands: Sequence[Mapping],
+                           cmap: IdentityMap) -> List[_SepClasses]:
+        """Build (or fetch) the ``_SepClasses`` struct of every candidate.
+
+        Built by *digit convolution* over the mapping's loop nest — never
+        materializing per-step arrays: each producer output dim's step-lo
+        value is a sum of independent digit contributions
+        ``idx * (blk * weight)`` over that dim's temporal loops, so the
+        distinct values (and their step counts) come from convolving the
+        tiny per-loop contribution arrays and one ``np.unique`` at the
+        end. Bank values likewise accumulate per spatial loop over an
+        ``arange(n_banks)`` base; a single joint ``np.unique`` over the
+        (K, P, Q) bank-value code yields ``jbmap``/``bvj`` in one pass."""
+        ck = cmap.key()
+        out = [self._cur.sepcls.get((m.cache_key, ck)) for m in cands]
+        missing: Dict = {}
+        for k, m in enumerate(cands):
+            if out[k] is None:
+                missing.setdefault(m.cache_key, m)
+        if not missing:
+            return out
+        layer = next(iter(missing.values())).layer
+        st, pad, pool = layer.stride, layer.pad, cmap.pool
+        # weight of one unit of each loop dim in the projected step-lo /
+        # bank value of each producer output dim (IdentityMap.to_producer
+        # algebra; the -pool*pad shift is applied after dedup)
+        coeff = {"C": ("K", 1), "P": ("P", pool * st), "R": ("P", pool),
+                 "Q": ("Q", pool * st), "S": ("Q", pool)}
+        shift = {"K": 0, "P": -pool * pad, "Q": -pool * pad}
+        zero1 = np.zeros(1, dtype=np.int64)
+        one1 = np.ones(1, dtype=np.int64)
+        for m in missing.values():
+            nb, nt = m.n_banks, m.n_steps
+            banks = self._arange(nb)
+            vals = {"K": zero1, "P": zero1, "Q": zero1}
+            gprod = {"K": 1, "P": 1, "Q": 1}
+            bparts: Dict[str, Optional[np.ndarray]] = {
+                "K": None, "P": None, "Q": None}
+            for lp, blk, _tstride, bstride in m.rect_loops:
+                c = coeff.get(lp.dim)
+                if c is None:
+                    continue
+                d, w = c
+                if lp.spatial:
+                    cb = ((banks // bstride) % lp.size) * (blk * w)
+                    bparts[d] = cb if bparts[d] is None else bparts[d] + cb
+                else:
+                    vals[d] = (vals[d][:, None]
+                               + self._digit_contrib(lp.size, blk * w)
+                               ).reshape(-1)
+                    gprod[d] *= lp.size
+            tvals: Dict[str, np.ndarray] = {}
+            cnts: Dict[str, np.ndarray] = {}
+            for d in ("K", "P", "Q"):
+                v = vals[d]
+                if v.size > 1:
+                    u, c = np.unique(v, return_counts=True)
+                else:
+                    u, c = v, one1
+                tvals[d] = u + shift[d] if shift[d] else u
+                cnts[d] = c
+            # steps outside this dim-triple's digit groups are free: every
+            # (K, P, Q) class combo repeats exactly ``rest`` times
+            rest = nt // (gprod["K"] * gprod["P"] * gprod["Q"])
+            wjoint = (cnts["K"][:, None, None] * cnts["P"][None, :, None]
+                      * cnts["Q"][None, None, :] * rest).astype(np.float64)
+            bK = bparts["K"]
+            bP = bparts["P"]
+            bQ = bparts["Q"]
+            if bK is None:
+                bK = self._digit_contrib(nb, 0)
+            if bP is None:
+                bP = self._digit_contrib(nb, 0)
+            if bQ is None:
+                bQ = self._digit_contrib(nb, 0)
+            spanP = int(bP.max()) + 1
+            spanQ = int(bQ.max()) + 1
+            code_b = (bK * spanP + bP) * spanQ + bQ
+            _u, idx, jbmap = np.unique(
+                code_b, return_index=True, return_inverse=True)
+            ext = m.tile_extent
+            s = _SepClasses()
+            s.tvals = tvals
+            s.cst = {"K": ext["C"] - 1,
+                     "P": pool * (st * (ext["P"] - 1) + ext["R"] - 1)
+                          + pool - 1,
+                     "Q": pool * (st * (ext["Q"] - 1) + ext["S"] - 1)
+                          + pool - 1}
+            s.bvj = {"K": bK[idx], "P": bP[idx], "Q": bQ[idx]}
+            s.jbmap = jbmap
+            s.wjoint = wjoint
+            s.wflat = None
+            s.cells = idx.size * wjoint.size
+            s.tmin = None
+            s.scodes = {}
+            self._cur.sepcls[(m.cache_key, ck)] = s
+        return [self._cur.sepcls[(m.cache_key, ck)] for m in cands]
+
+    def _cls_r0(self, m: Mapping, cmap: IdentityMap, s: _SepClasses,
+                p_layer: LayerSpec) -> np.ndarray:
+        """Class-grid ready-at-0 mask, shape (JB, 1, VP, VQ) broadcastable
+        against the (JB, VK, VP, VQ) step grid. Exact
+        ``IdentityMap.to_producer`` semantics evaluated on class
+        representatives (the conditions are functions of the class
+        values, so every member of a class shares the verdict)."""
+        key = (m.cache_key, cmap.key(), p_layer.P, p_layer.Q)
+        hit = self._cur.clsr0.get(key)
+        if hit is None:
+            loP = s.bvj["P"][:, None] + s.tvals["P"][None, :]
+            loQ = s.bvj["Q"][:, None] + s.tvals["Q"][None, :]
+            p0 = (loP + s.cst["P"] < 0) | (loP >= p_layer.P)
+            q0 = (loQ + s.cst["Q"] < 0) | (loQ >= p_layer.Q)
+            hit = p0[:, None, :, None] | q0[:, None, None, :]
+            self._cur.clsr0[key] = hit
+        return hit
+
+    def _cls_tmin(self, m: Mapping, cmap: IdentityMap,
+                  s: _SepClasses) -> Dict[str, np.ndarray]:
+        """Per step-lo class, the minimum *partial* step index contributed
+        by that dim's temporal digit group ({C} for K, {P,R} for P,
+        {Q,S} for Q). The full step index is the sum of the three group
+        partials plus a rest-digit partial whose minimum is 0, so the
+        minimum step index over a joint class cell is the sum of the
+        per-dim class minima — which turns ``overlapped_end``'s
+        ``max(ready - t*L)`` into a class-grid max (overlap mode)."""
+        if s.tmin is None:
+            nt = m.n_steps
+            steps = np.arange(nt, dtype=np.int64)
+            cl = m.layer
+            pool = cmap.pool
+            coeff = {"C": ("K", 1),
+                     "P": ("P", pool * cl.stride), "R": ("P", pool),
+                     "Q": ("Q", pool * cl.stride), "S": ("Q", pool)}
+            tl = {d: np.zeros(nt, dtype=np.int64) for d in ("K", "P", "Q")}
+            tp = {d: np.zeros(nt, dtype=np.int64) for d in ("K", "P", "Q")}
+            for lp, blk, tstride, _bstride in m.rect_loops:
+                c = coeff.get(lp.dim)
+                if c is None or lp.spatial:
+                    continue
+                d, w = c
+                idx = (steps // tstride) % lp.size
+                tl[d] += idx * (blk * w)
+                tp[d] += idx * tstride
+            tl["P"] -= pool * cl.pad
+            tl["Q"] -= pool * cl.pad
+            tmin = {}
+            for d in ("K", "P", "Q"):
+                pos = np.searchsorted(s.tvals[d], tl[d])
+                mn = np.full(s.tvals[d].size, np.iinfo(np.int64).max)
+                np.minimum.at(mn, pos, tp[d])
+                tmin[d] = mn
+            s.tmin = tmin
+        return s.tmin
+
+    def _scan_tables_batch(self, m_p: Mapping,
+                           structs: Sequence[_SepClasses]) -> List:
+        """Class-grid ready-step tables for every struct against one
+        producer: per dim the distinct (lo, hi) interval codes of ALL
+        structs are pooled, digit-scanned once and gathered back, then the
+        separable contributions assemble each struct's (JB, VK, VP, VQ)
+        int64 grid (``T[jb, kK, kP, kQ]`` = producer step feeding that
+        class cell — same integer pipeline as ``_ready_steps_identity``,
+        evaluated on class representatives)."""
+        per_dim, const = rect_loop_groups(m_p)
+        pl = m_p.layer
+        T = [np.full((s.bvj["K"].size, s.tvals["K"].size,
+                      s.tvals["P"].size, s.tvals["Q"].size), float(const))
+             for s in structs]
+        for ax, d in enumerate(("K", "P", "Q")):
+            loops = per_dim.get(d)
+            if not loops:
+                continue
+            dim = pl.dim(d)
+            parts = []
+            for s in structs:
+                c = s.scodes.get((d, dim))
+                if c is None:
+                    lo_raw = s.bvj[d][:, None] + s.tvals[d][None, :]
+                    hi_raw = lo_raw + s.cst[d]
+                    if d == "K":
+                        plo_c, phi_c = lo_raw, hi_raw + 1
+                    else:  # to_producer's pre-clamp for P/Q
+                        plo_c = np.maximum(lo_raw, 0)
+                        phi_c = np.minimum(hi_raw, dim - 1) + 1
+                    lo_c = np.clip(plo_c, 0, dim - 1)
+                    hi_c = np.clip(phi_c, 1, dim) - 1      # inclusive
+                    c = lo_c.reshape(-1) * (dim + 1) + hi_c.reshape(-1)
+                    s.scodes[(d, dim)] = c
+                parts.append(c)
+            codes = np.concatenate(parts) if len(parts) > 1 else parts[0]
+            u, inv = _unique_inverse(codes, (dim + 1) * (dim + 1))
+            best = digit_scan(loops, u // (dim + 1), u % (dim + 1))
+            ofs = 0
+            for j, s in enumerate(structs):
+                jb, vd = s.bvj["K"].size, s.tvals[d].size
+                nsz = jb * vd
+                g = best[inv[ofs:ofs + nsz]].reshape(jb, vd)
+                ofs += nsz
+                shape = [jb, 1, 1, 1]
+                shape[1 + ax] = vd
+                T[j] = T[j] + g.reshape(shape)
+        return [t.astype(np.int64) for t in T]
+
+    def _tails_batch(self, cands: Sequence[Mapping]) -> None:
+        """Fill the tail-fraction cache for all candidates in one
+        ``stream_tail_fractions`` call (shared sample coordinates)."""
+        missing: Dict = {}
+        for m in cands:
+            if m.cache_key not in self._cur.tail:
+                missing.setdefault(m.cache_key, m)
+        if missing:
+            ms = list(missing.values())
+            for m, f in zip(ms, stream_tail_fractions(ms)):
+                self._cur.tail[m.cache_key] = float(f)
+
+    def _score_identity_batch(self, i: int, cands: Sequence[Mapping],
+                              edges: Sequence[Sequence[Edge]],
+                              done: Dict[int, LayerResult], mode: str,
+                              has_consumer: bool, objective: str,
+                              blend_alpha: float) -> List:
+        """Batched scores for candidates under identity edges via factored
+        class histograms + grouped closed forms (DESIGN.md Section 6).
+        Returns a list aligned with ``cands``: float scores, or None where
+        the class grid exceeds ``_GRID_GUARD`` (caller falls back to the
+        dense per-candidate path)."""
+        cmap = edges[i][0].cmap
+        structs = self._sep_classes_batch(cands, cmap)
+        res: List = [None] * len(cands)
+        sel = [k for k in range(len(cands))
+               if structs[k].cells <= _GRID_GUARD]
+        if not sel:
+            return res
+        ssel = [structs[k] for k in sel]
+        edata = []
+        for e in edges[i]:
+            prod = done[e.producer]
+            Ts = self._scan_tables_batch(prod.mapping, ssel)
+            fin, ranks, ufin = self._prod_ranks(prod)
+            r0s = [self._cls_r0(cands[k], cmap, structs[k],
+                                prod.mapping.layer) for k in sel]
+            edata.append((prod, Ts, fin, ranks, ufin, r0s))
+        single = len(edata) == 1
+        perfs = [self.perf(cands[k]) for k in sel]
+        tails = ([self.tail(cands[k]) for k in sel] if has_consumer
+                 else [0.0] * len(sel))
+        if mode == "overlap":
+            for j, k in enumerate(sel):
+                m, s, perf = cands[k], structs[k], perfs[j]
+                g = None
+                for (prod, Ts, fin, ranks, ufin, r0s) in edata:
+                    ge = np.where(r0s[j], 0.0,
+                                  fin[Ts[j]] + prod.perf.tile_move_ns)
+                    g = ge if g is None else np.maximum(g, ge)
+                tm = self._cls_tmin(m, cmap, s)
+                tmg = (tm["K"][:, None, None] + tm["P"][None, :, None]
+                       + tm["Q"][None, None, :]).astype(np.float64)
+                end = float((g - tmg[None] * perf.step_ns).max()) \
+                    + float(m.n_steps) * perf.step_ns
+                penalty = tails[j] * perf.compute_ns
+                res[k] = combine_objective(
+                    objective, end + perf.output_move_ns + penalty,
+                    perf.energy_pj, blend_alpha)
+            return res
+        # transform mode: per-candidate grouped (value, orig-bank)
+        # histograms, then one batched closed-form schedule per distinct
+        # bank count
+        hist = []
+        for j, k in enumerate(sel):
+            s = structs[k]
+            JB = s.bvj["K"].size
+            if single:
+                prod, Ts, fin, ranks, ufin, r0s = edata[0]
+                Tg = Ts[j]
+                u_rk, inv = _unique_inverse(ranks[Tg].reshape(-1),
+                                            ufin.size)
+                kc = np.where(r0s[j], 0, inv.reshape(Tg.shape) + 1)
+                V1 = u_rk.size + 1
+                vals = np.empty(V1)
+                vals[0] = 0.0
+                vals[1:] = ufin[u_rk] + prod.perf.tile_move_ns
+            else:
+                g = None
+                for (prod, Ts, fin, ranks, ufin, r0s) in edata:
+                    ge = np.where(r0s[j], 0.0,
+                                  fin[Ts[j]] + prod.perf.tile_move_ns)
+                    g = ge if g is None else np.maximum(g, ge)
+                vals, inv = np.unique(g.reshape(-1), return_inverse=True)
+                kc = inv.reshape(g.shape)
+                V1 = vals.size
+            flatk = kc + (self._arange(JB) * V1)[:, None, None, None]
+            w = s.wflat
+            if w is None:
+                w = s.wflat = np.ascontiguousarray(
+                    np.broadcast_to(s.wjoint.reshape(-1)[None],
+                                    (JB, s.wjoint.size))).reshape(-1)
+            cnt = np.bincount(flatk.reshape(-1), weights=w,
+                              minlength=JB * V1).reshape(JB, V1)
+            cnt = np.round(cnt).astype(np.int64)
+            used = cnt.any(axis=0)
+            if not used.all():
+                vals = vals[used]
+                cnt = cnt[:, used]
+            if vals.size > 1 and np.any(np.diff(vals) <= 0):
+                # float collisions (distinct fins colliding after
+                # + tile_move): merge adjacent equal values — within one
+                # value group the stable sort is original-bank-major either
+                # way, so per-bank counts just add
+                keep = np.concatenate([[True], np.diff(vals) > 0])
+                gid = np.cumsum(keep) - 1
+                cnt2 = np.zeros((cnt.shape[0], int(gid[-1]) + 1),
+                                dtype=np.int64)
+                np.add.at(cnt2.T, gid, cnt.T)
+                vals = vals[keep]
+                cnt = cnt2
+            hist.append((vals, cnt[s.jbmap, :]))
+        by_nb: Dict[int, List[int]] = {}
+        for j, k in enumerate(sel):
+            by_nb.setdefault(cands[k].n_banks, []).append(j)
+        for nb, grp in by_nb.items():
+            Vmax = max(hist[j][0].size for j in grp)
+            values = np.zeros((len(grp), Vmax))
+            counts = np.zeros((len(grp), Vmax, nb), dtype=np.int64)
+            for x, j in enumerate(grp):
+                v, c = hist[j]
+                values[x, :v.size] = v
+                counts[x, :v.size, :] = c.T
+            ends, moved = transform_end_grouped(
+                values, counts,
+                np.array([cands[sel[j]].n_steps for j in grp]),
+                np.array([perfs[j].step_ns for j in grp]),
+                np.array([perfs[j].tile_move_ns for j in grp]))
+            for x, j in enumerate(grp):
+                k = sel[j]
+                perf = perfs[j]
+                penalty = tails[j] * perf.compute_ns
+                moved_bytes = int(moved[x]) * float(perf.tile_bytes)
+                res[k] = combine_objective(
+                    objective,
+                    float(ends[x]) + perf.output_move_ns + penalty,
+                    perf.energy_pj + moved_bytes * perf.move_pj_per_byte,
+                    blend_alpha)
+        return res
+
     def ready_steps_batch(self, m_p: Mapping, cands: Sequence[Mapping],
                           cmap: Optional[CoordMap] = None):
         """``ready_steps`` for K candidate consumers of one layer against a
@@ -353,7 +779,7 @@ class OverlapEngine:
         if todo:
             keys = list(todo)
             reps = [cands[todo[key][0]] for key in keys]
-            projs = [self.projection(m, cmap, m_p.layer) for m in reps]
+            projs = self._projection_batch(reps, cmap, m_p.layer)
             cat_lo = {d: np.concatenate([p[0][d].reshape(-1) for p in projs])
                       for d in OUTPUT_DIMS}
             cat_hi = {d: np.concatenate([p[1][d].reshape(-1) for p in projs])
@@ -370,19 +796,23 @@ class OverlapEngine:
         return out
 
     def _prod_ranks(self, prod: LayerResult):
-        """Per producer result: synchronous per-step finish times and their
-        dense ranks (ties share a rank). Ranks are integer sort keys whose
-        stable order equals the stable order of the float ready times."""
+        """Per producer result: synchronous per-step finish times, their
+        dense ranks (ties share a rank) and the ascending distinct finish
+        values (``uniq_fin[ranks[t]] == fin_step[t]``). Ranks are integer
+        sort keys whose stable order equals the stable order of the float
+        ready times; the batched scorer histograms over ranks and decodes
+        values through ``uniq_fin``."""
         ent = self._cur.ranks.get(id(prod))
         if ent is None or ent[0] is not prod:
             fin_step = prod.finish_ns.max(axis=0)
             order = np.argsort(fin_step, kind="stable")
             vals = fin_step[order]
+            keep = np.concatenate([[True], vals[1:] > vals[:-1]])
             ranks = np.empty(fin_step.size, dtype=np.int64)
-            ranks[order] = np.concatenate(
-                [[0], np.cumsum(vals[1:] > vals[:-1])])
-            ent = self._cur.ranks[id(prod)] = (prod, fin_step, ranks)
-        return ent[1], ent[2]
+            ranks[order] = np.cumsum(keep) - 1
+            ent = self._cur.ranks[id(prod)] = (prod, fin_step, ranks,
+                                               vals[keep])
+        return ent[1], ent[2], ent[3]
 
     def ready_matrix(self, mapping: Mapping, edges: Sequence[Edge],
                      done: Dict[int, LayerResult]) -> np.ndarray:
@@ -392,7 +822,7 @@ class OverlapEngine:
         for e in edges:
             prod = done[e.producer]
             step, ready0 = self.ready_steps(prod.mapping, mapping, e.cmap)
-            fin_step, _ = self._prod_ranks(prod)
+            fin_step, _, _ = self._prod_ranks(prod)
             r = fin_step[step] + prod.perf.tile_move_ns
             r = np.where(ready0, 0.0, r)
             ready = np.maximum(ready, r)
@@ -414,7 +844,7 @@ class OverlapEngine:
         e = edges[0]
         prod = done[e.producer]
         step, ready0 = self.ready_steps(prod.mapping, mapping, e.cmap)
-        fin_step, ranks = self._prod_ranks(prod)
+        fin_step, ranks, _ = self._prod_ranks(prod)
         ready = np.where(ready0, 0.0,
                          fin_step[step] + prod.perf.tile_move_ns)
         # finish times are positive, so rank 0 is reserved for ready-at-0
@@ -510,18 +940,24 @@ class OverlapEngine:
             return np.array([combine_objective(
                 objective, base + self.perf(m).sequential_ns,
                 self.perf(m).energy_pj, blend_alpha) for m in cands])
-        if edges[i]:
-            for e in edges[i]:
-                self.ready_steps_batch(done[e.producer].mapping, cands,
-                                       e.cmap)
         # score memo: a candidate's forward score is a pure function of
         # (mode, objective, candidate, committed producer results,
         # has_consumer) — refine passes and repeated strategy sweeps
         # re-score identical contexts, which the reference path recomputes
         # from scratch
-        prods = tuple(done[e.producer] for e in edges[i])
-        pids = tuple(id(p) for p in prods)
+        prods = tuple([done[e.producer] for e in edges[i]])
+        pids = tuple([id(p) for p in prods])
+        # pool memo: refine passes and repeat sweeps re-score the exact
+        # same candidate pool against the same committed producers — one
+        # tuple key skips even the per-candidate memo scan
+        pkey = (mode, objective, blend_alpha, has_consumer, pids,
+                tuple([m.cache_key for m in cands]))
+        phit = self._cur.score.get(pkey)
+        if phit is not None and all([a is b for a, b in zip(phit[0],
+                                                            prods)]):
+            return phit[1].copy()
         out = np.empty(len(cands), dtype=np.float64)
+        todo: List[int] = []
         for k, m in enumerate(cands):
             skey = (mode, objective, blend_alpha, m.cache_key,
                     has_consumer, pids)
@@ -529,33 +965,70 @@ class OverlapEngine:
             if hit is not None and all(a is b for a, b in zip(hit[0],
                                                               prods)):
                 out[k] = hit[1]
-                continue
-            perf = self.perf(m)
-            tail = self.tail(m) if has_consumer else 0.0
-            penalty = tail * perf.compute_ns
-            if not edges[i]:
-                out[k] = combine_objective(
-                    objective, perf.sequential_ns + penalty,
-                    perf.energy_pj, blend_alpha)
             else:
-                ready, order = self.ready_matrix_order(m, edges[i], done)
-                if mode == "transform":
-                    tr = transform_schedule(
-                        ready, perf.step_ns, perf.tile_move_ns,
-                        order=order, tile_bytes=perf.tile_bytes,
-                        move_pj_per_byte=perf.move_pj_per_byte)
-                    out[k] = combine_objective(
-                        objective,
-                        tr.end_ns + perf.output_move_ns + penalty,
-                        perf.energy_pj + tr.move_energy_pj, blend_alpha)
-                else:
-                    out[k] = combine_objective(
-                        objective,
-                        overlapped_end(ready, perf.step_ns)
-                        + perf.output_move_ns + penalty,
-                        perf.energy_pj, blend_alpha)
-            self._cur.score[skey] = (prods, out[k])
+                todo.append(k)
+        if not todo:
+            self._cur.score[pkey] = (prods, out.copy())
+            return out
+        sub = [cands[k] for k in todo]
+        if has_consumer:
+            self._tails_batch(sub)
+        # fast path: identity edges with one shared coordinate map score
+        # through the class-histogram batch; anything else (non-identity
+        # maps, mixed pooling, guard overflows) falls back per candidate
+        fast = (bool(edges[i]) and mode in ("overlap", "transform")
+                and all(type(e.cmap) is IdentityMap for e in edges[i])
+                and len({e.cmap.key() for e in edges[i]}) == 1)
+        scored = (self._score_identity_batch(i, sub, edges, done, mode,
+                                             has_consumer, objective,
+                                             blend_alpha)
+                  if fast else [None] * len(sub))
+        if edges[i] and not fast:
+            for e in edges[i]:
+                self.ready_steps_batch(done[e.producer].mapping, sub,
+                                       e.cmap)
+        for j, k in enumerate(todo):
+            m = cands[k]
+            sc = scored[j]
+            if sc is None:
+                sc = self._score_forward_one(i, m, edges, done, mode,
+                                             has_consumer, objective,
+                                             blend_alpha)
+            out[k] = sc
+            skey = (mode, objective, blend_alpha, m.cache_key,
+                    has_consumer, pids)
+            self._cur.score[skey] = (prods, sc)
+        self._cur.score[pkey] = (prods, out.copy())
         return out
+
+    def _score_forward_one(self, i: int, m: Mapping,
+                           edges: Sequence[Sequence[Edge]],
+                           done: Dict[int, LayerResult], mode: str,
+                           has_consumer: bool, objective: str,
+                           blend_alpha: float) -> float:
+        """Dense per-candidate forward score (the pre-batching engine path;
+        fallback for contexts the class-histogram scorer does not cover)."""
+        perf = self.perf(m)
+        tail = self.tail(m) if has_consumer else 0.0
+        penalty = tail * perf.compute_ns
+        if not edges[i]:
+            return combine_objective(
+                objective, perf.sequential_ns + penalty,
+                perf.energy_pj, blend_alpha)
+        ready, order = self.ready_matrix_order(m, edges[i], done)
+        if mode == "transform":
+            tr = transform_schedule(
+                ready, perf.step_ns, perf.tile_move_ns,
+                order=order, tile_bytes=perf.tile_bytes,
+                move_pj_per_byte=perf.move_pj_per_byte)
+            return combine_objective(
+                objective, tr.end_ns + perf.output_move_ns + penalty,
+                perf.energy_pj + tr.move_energy_pj, blend_alpha)
+        return combine_objective(
+            objective,
+            overlapped_end(ready, perf.step_ns)
+            + perf.output_move_ns + penalty,
+            perf.energy_pj, blend_alpha)
 
     def score_backward(self, i: int, m: Mapping,
                        edges: Sequence[Sequence[Edge]],
@@ -618,6 +1091,11 @@ def optimize_network_engine(layers: Sequence[LayerSpec],
     """Engine-backed ``optimize_network``: identical algorithm, candidates
     and tie-breaking as the reference path — same chosen mappings, same
     ``total_ns`` — with batched scoring and incremental refinement."""
+    if cfg.use_exhaustive_overlap:
+        raise ValueError(
+            "use_exhaustive_overlap has no engine twin; call "
+            "optimize_network, which routes the flag to the reference "
+            "implementation")
     eng = engine or OverlapEngine()
     n = len(layers)
     order, backward_part = _visit_order(layers, cfg.strategy)

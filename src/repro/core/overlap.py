@@ -317,6 +317,14 @@ def ready_steps_exhaustive(m_p: Mapping, m_c: Mapping,
                     if ok and tp > best_t:
                         best_t = tp
             step[bc, tc] = best_t
+    # a space whose projected rectangle intersects NO producer space needs
+    # no producer data: ready at t=0, like the analytical path's ready0
+    # mask. Leaving the -1 search sentinel would make ``fin_step[step]``
+    # wrap to the LAST producer step ("ready at producer completion").
+    none = step < 0
+    if none.any():
+        step[none] = 0
+        ready0 = ready0 | none
     return step, ready0
 
 
@@ -360,3 +368,43 @@ def stream_tail_fraction(mapping: Mapping, samples: int = 5) -> float:
                  samples)
     _, steps = locate_finish(mapping, {"K": ks, "P": ps, "Q": qs})
     return float(steps.mean() + 1) / mapping.n_steps
+
+
+def stream_tail_fractions(mappings, samples: int = 5) -> np.ndarray:
+    """``stream_tail_fraction`` vectorized over K candidate mappings of one
+    layer. The sampled output-coordinate grid depends only on the layer, so
+    it is built once; per candidate only the temporal digit location runs
+    (the bank half of ``locate_finish`` is dead weight for the tail).
+    Bit-identical to the scalar function: the located steps are exact
+    integers and the mean of int64 is order-independent."""
+    if not len(mappings):
+        return np.zeros(0, dtype=np.float64)
+    layer = mappings[0].layer
+    ps = np.repeat(np.linspace(0, layer.P - 1, samples).astype(np.int64),
+                   samples)
+    qs = np.tile(np.linspace(0, layer.Q - 1, samples).astype(np.int64),
+                 samples)
+    coords = {"P": ps, "Q": qs}
+    out = np.empty(len(mappings), dtype=np.float64)
+    for k, m in enumerate(mappings):
+        # K samples are the constant K-1 and reduction/batch dims take
+        # their last iteration, so only P/Q loops vary across the sample
+        # grid — fold everything else into an integer constant (the summed
+        # step indices are the same exact integers as the full loop)
+        const = 0
+        step = None
+        for lp, blk, tstride, bstride in m.rect_loops:
+            if lp.spatial:
+                continue
+            if lp.dim == "K":
+                const += int(((layer.K - 1) // blk) % lp.size) * tstride
+            elif lp.dim in coords:
+                c = ((coords[lp.dim] // blk) % lp.size) * tstride
+                step = c if step is None else step + c
+            else:               # reduction / batch dims: last iteration
+                const += (lp.size - 1) * tstride
+        if step is None:
+            out[k] = float(const + 1) / m.n_steps
+        else:
+            out[k] = float((step + const).mean() + 1) / m.n_steps
+    return out

@@ -24,7 +24,8 @@ import numpy as np
 from .arch import ArchSpec
 from .mapping import Mapping, heuristic_mapping, random_mapping
 from .overlap import (Edge, overlapped_end, ready_steps_analytical,
-                      schedule_with_ready, stream_tail_fraction)
+                      ready_steps_exhaustive, schedule_with_ready,
+                      stream_tail_fraction)
 from .perf_model import LayerPerf, analyze
 from .transform import transform_schedule
 from .workload import LayerSpec
@@ -148,14 +149,22 @@ class NetworkResult:
 # ---------------------------------------------------------------------------
 
 def _ready_matrix(idx: int, mapping: Mapping, edges: Sequence[Edge],
-                  done: Dict[int, LayerResult]) -> np.ndarray:
+                  done: Dict[int, LayerResult],
+                  use_exhaustive: bool = False) -> np.ndarray:
     """Absolute ready time per (bank, step) of ``mapping``, max over
-    dependency edges (paper Section IV-G: latest producing space)."""
+    dependency edges (paper Section IV-G: latest producing space).
+
+    ``use_exhaustive`` switches the ready-step analysis to OverlaPIM's
+    O(N*M) traversal (``SearchConfig.use_exhaustive_overlap``) — the
+    baseline the paper compares against. Result-identical to the
+    analytical path (property-tested), just slow."""
     nb, nt = mapping.n_banks, mapping.n_steps
     ready = np.zeros((nb, nt), dtype=np.float64)
+    ready_steps = (ready_steps_exhaustive if use_exhaustive
+                   else ready_steps_analytical)
     for e in edges:
         prod = done[e.producer]
-        step, ready0 = ready_steps_analytical(prod.mapping, mapping, e.cmap)
+        step, ready0 = ready_steps(prod.mapping, mapping, e.cmap)
         # synchronous-time-step semantics (paper Fig 3): a step completes
         # when all banks complete it
         fin_step = prod.finish_ns.max(axis=0)
@@ -167,7 +176,8 @@ def _ready_matrix(idx: int, mapping: Mapping, edges: Sequence[Edge],
 
 def evaluate_chain(mappings: Sequence[Mapping],
                    edges: Sequence[Sequence[Edge]],
-                   mode: str) -> NetworkResult:
+                   mode: str,
+                   use_exhaustive_overlap: bool = False) -> NetworkResult:
     """Run the whole network with fixed mappings under a given mode."""
     done: Dict[int, LayerResult] = {}
     per_layer = []
@@ -183,7 +193,8 @@ def evaluate_chain(mappings: Sequence[Mapping],
             end = start + perf.compute_ns + perf.output_move_ns
             res = LayerResult(m, perf, start, end, fin)
         else:
-            ready = _ready_matrix(i, m, edges[i], done)
+            ready = _ready_matrix(i, m, edges[i], done,
+                                  use_exhaustive_overlap)
             start = float(ready.min()) if ready.size else 0.0
             if mode == "transform" and edges[i]:
                 tr = transform_schedule(
@@ -226,7 +237,8 @@ def candidates(layer: LayerSpec, arch: ArchSpec,
 
 
 def _score_forward(i, m, edges, done, mode, has_consumer=True,
-                   objective="latency", blend_alpha=0.5) -> float:
+                   objective="latency", blend_alpha=0.5,
+                   use_exhaustive=False) -> float:
     perf = analyze(m)
     if mode == "original":
         base = max((done[e.producer].end_ns for e in edges[i]), default=0.0)
@@ -239,7 +251,7 @@ def _score_forward(i, m, edges, done, mode, has_consumer=True,
     if not edges[i]:
         return combine_objective(objective, perf.sequential_ns + penalty,
                                  perf.energy_pj, blend_alpha)
-    ready = _ready_matrix(i, m, edges[i], done)
+    ready = _ready_matrix(i, m, edges[i], done, use_exhaustive)
     if mode == "transform":
         tr = transform_schedule(ready, perf.step_ns, perf.tile_move_ns,
                                 tile_bytes=perf.tile_bytes,
@@ -253,7 +265,7 @@ def _score_forward(i, m, edges, done, mode, has_consumer=True,
         perf.energy_pj, blend_alpha)
 
 
-def _commit(i, m, edges, done, mode) -> LayerResult:
+def _commit(i, m, edges, done, mode, use_exhaustive=False) -> LayerResult:
     perf = analyze(m)
     nb, nt = m.n_banks, m.n_steps
     if mode == "original" or not edges[i]:
@@ -264,7 +276,7 @@ def _commit(i, m, edges, done, mode) -> LayerResult:
                                       (nb, nt)).copy()
         end = start + perf.compute_ns + perf.output_move_ns
         return LayerResult(m, perf, start, end, fin)
-    ready = _ready_matrix(i, m, edges[i], done)
+    ready = _ready_matrix(i, m, edges[i], done, use_exhaustive)
     start = float(ready.min())
     if mode == "transform":
         tr = transform_schedule(ready, perf.step_ns, perf.tile_move_ns,
@@ -286,7 +298,8 @@ def _consumers_of(edges: Sequence[Sequence[Edge]], i: int) -> List[int]:
 
 
 def _score_backward(i, m, edges, fixed: Dict[int, Mapping], mode,
-                    objective="latency", blend_alpha=0.5) -> float:
+                    objective="latency", blend_alpha=0.5,
+                    use_exhaustive=False) -> float:
     """Score a producer candidate by the end time (scalarized under the
     objective) of its (fixed-mapping) consumers, assuming the producer
     starts stall-free at t=0."""
@@ -304,7 +317,7 @@ def _score_backward(i, m, edges, fixed: Dict[int, Mapping], mode,
         mc = fixed[j]
         pc = analyze(mc)
         es = [e for e in edges[j] if e.producer == i]
-        ready = _ready_matrix(j, mc, es, done)
+        ready = _ready_matrix(j, mc, es, done, use_exhaustive)
         if mode == "transform":
             tr = transform_schedule(ready, pc.step_ns, pc.tile_move_ns,
                                     tile_bytes=pc.tile_bytes,
@@ -325,7 +338,10 @@ def optimize_network(layers: Sequence[LayerSpec],
                      arch: ArchSpec,
                      cfg: Optional[SearchConfig] = None) -> NetworkResult:
     cfg = cfg or SearchConfig()
-    if cfg.use_engine:
+    # the OverlaPIM-baseline analysis has no batched engine twin: fall
+    # back to the reference path (the engine itself raises if handed the
+    # flag directly)
+    if cfg.use_engine and not cfg.use_exhaustive_overlap:
         from .engine import optimize_network_engine  # lazy: avoids cycle
         return optimize_network_engine(layers, edges, arch, cfg)
     return _optimize_network_reference(layers, edges, arch, cfg)
@@ -338,6 +354,7 @@ def _optimize_network_reference(layers: Sequence[LayerSpec],
     """Pre-engine per-candidate path — the differential-test oracle."""
     n = len(layers)
     order, backward_part = _visit_order(layers, cfg.strategy)
+    exh = cfg.use_exhaustive_overlap
 
     chosen: Dict[int, Mapping] = {}
     done: Dict[int, LayerResult] = {}
@@ -348,7 +365,8 @@ def _optimize_network_reference(layers: Sequence[LayerSpec],
                        key=lambda m: _score_backward(i, m, edges, chosen,
                                                      cfg.mode,
                                                      cfg.objective,
-                                                     cfg.blend_alpha))
+                                                     cfg.blend_alpha,
+                                                     exh))
         else:
             # forward scoring needs producers committed; producers missing
             # (backward half not yet visited) fall back to sequential score
@@ -357,7 +375,7 @@ def _optimize_network_reference(layers: Sequence[LayerSpec],
             if avail:
                 best = min(cands, key=lambda m: _score_forward(
                     i, m, edges, done, cfg.mode, has_cons,
-                    cfg.objective, cfg.blend_alpha))
+                    cfg.objective, cfg.blend_alpha, exh))
             else:
                 def _seq_score(m):
                     p = analyze(m)
@@ -367,9 +385,9 @@ def _optimize_network_reference(layers: Sequence[LayerSpec],
                 best = min(cands, key=_seq_score)
         chosen[i] = best
         if all(e.producer in done for e in edges[i]):
-            done[i] = _commit(i, best, edges, done, cfg.mode)
+            done[i] = _commit(i, best, edges, done, cfg.mode, exh)
     result = evaluate_chain([chosen[i] for i in range(n)], edges,
-                            cfg.mode)
+                            cfg.mode, exh)
     # coordinate-descent refinement (beyond-paper): re-optimize each layer
     # against BOTH its committed producer and consumer — the paper's
     # linear pass is myopic about successors (Section IV-K motivates this)
@@ -386,7 +404,7 @@ def _optimize_network_reference(layers: Sequence[LayerSpec],
                 trial = chosen.copy()
                 trial[i] = m
                 r = evaluate_chain([trial[j] for j in range(n)], edges,
-                                   cfg.mode)
+                                   cfg.mode, exh)
                 sc = r.objective_value(cfg.objective, cfg.blend_alpha)
                 if sc < best_t - 1e-9:
                     best_m, best_t = m, sc
@@ -394,7 +412,7 @@ def _optimize_network_reference(layers: Sequence[LayerSpec],
                 chosen[i] = best_m
                 improved = True
         result = evaluate_chain([chosen[i] for i in range(n)], edges,
-                                cfg.mode)
+                                cfg.mode, exh)
         if not improved:
             break
     result.objective = cfg.objective

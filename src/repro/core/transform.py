@@ -90,3 +90,62 @@ def transform_schedule(ready_ns: np.ndarray, step_ns: float,
                            moved_frac=float(moved.mean()) if n else 0.0,
                            moved_bytes=moved_bytes,
                            move_energy_pj=moved_bytes * move_pj_per_byte)
+
+
+def transform_end_grouped(values: np.ndarray, counts: np.ndarray,
+                          n_steps: np.ndarray, step_ns: np.ndarray,
+                          tile_move_ns: np.ndarray,
+                          start_floor: float = 0.0):
+    """Closed-form ``transform_schedule`` end time + moved-space count for a
+    batch of candidates whose ready matrices are given as grouped
+    (value, original-bank) histograms instead of dense (nb, nt) arrays.
+
+    ``values`` is (K, V) float64: each candidate's distinct ready values in
+    strictly ascending order (rows right-padded arbitrarily — padded slots
+    must carry zero counts). ``counts`` is (K, V, nb) int64:
+    ``counts[k, v, b]`` spaces of candidate ``k`` with original bank ``b``
+    share ready value ``values[k, v]``. All candidates in one call share
+    ``nb``; ``n_steps`` / ``step_ns`` / ``tile_move_ns`` are (K,) arrays.
+    Returns ``(end_ns, n_moved)`` as (K,) arrays.
+
+    Exactness (DESIGN.md Section 6): the stable ascending sort of the dense
+    matrix orders spaces by (value, flat index), and flat index order
+    within one value group is original-bank-major — so the histogram
+    determines the exact sorted sequence. Under round-robin re-allocation
+    position ``p`` lands in bank ``p % nb`` at slot ``p // nb`` and is
+    *unmoved* iff ``p % nb`` equals its original bank. Every space of a
+    (value, bank) run shares ``eff = max(value [+ tile_move if moved],
+    floor)``; within a run each per-new-bank term ``eff - slot * L`` is
+    maximal at the run's first unmoved / first moved position (slot is
+    nondecreasing along the run and float ``a - b`` / ``t * L`` are
+    monotone), so the global schedule maximum — and hence
+    ``end = max(eff - slot * L) + n_steps * L`` — needs only two
+    representatives per run. Bit-identical to ``transform_schedule``
+    (differential-tested)."""
+    K, V, nb = counts.shape
+    nt = np.asarray(n_steps, dtype=np.int64)
+    L = np.asarray(step_ns, dtype=np.float64)[:, None, None]
+    tmv = np.asarray(tile_move_ns, dtype=np.float64)[:, None, None]
+    gsize = counts.sum(axis=2)                      # (K, V)
+    gstart = np.cumsum(gsize, axis=1) - gsize       # exclusive prefix
+    off = np.cumsum(counts, axis=2) - counts        # within-group offsets
+    s = gstart[:, :, None] + off                    # run starts (K, V, nb)
+    e = s + counts
+    b = np.arange(nb, dtype=np.int64)[None, None, :]
+    nonempty = counts > 0
+    # unmoved spaces of run [s, e): positions p with p % nb == b
+    unmoved = np.where(nonempty, (e - b - 1) // nb - (s - b - 1) // nb, 0)
+    n_moved = nb * nt - unmoved.sum(axis=(1, 2))
+    fu = s + ((b - s) % nb)                         # first unmoved position
+    has_u = nonempty & (fu < e)
+    fm = np.where(s % nb != b, s, s + 1)            # first moved position
+    has_m = nonempty & (fm < e) & (nb > 1)
+    vv = np.asarray(values, dtype=np.float64)[:, :, None]
+    effu = np.maximum(vv, start_floor)
+    effm = np.maximum(vv + tmv, start_floor)
+    xu = np.where(has_u, effu - (fu // nb).astype(np.float64) * L, -np.inf)
+    xm = np.where(has_m, effm - (fm // nb).astype(np.float64) * L, -np.inf)
+    best = np.maximum(xu, xm).max(axis=(1, 2))
+    end = best + nt.astype(np.float64) * np.asarray(step_ns,
+                                                    dtype=np.float64)
+    return end, n_moved

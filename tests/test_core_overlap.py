@@ -180,6 +180,123 @@ def test_bert_network_edges_analytical_equals_exhaustive(seed):
             assert np.array_equal(sa[~ra], se[~ra]), (i, e.producer)
 
 
+# ---------------------------------------------------------------------------
+# Exhaustive-path sentinel regression: a consumer space whose projected
+# rectangle intersects NO producer space (e.g. a channel overhang, where the
+# consumer reads more input channels than the producer computes) must come
+# out ready-at-0, not carrying the -1 search sentinel — ``fin_step[step]``
+# would wrap -1 to the LAST producer step and charge the space "ready at
+# producer completion".
+# ---------------------------------------------------------------------------
+
+def _overhang_pair(seed=0):
+    """Consumer C=8 > producer K=4: tiles with C-offset >= 4 project to
+    producer-K intervals beyond the producer's output range."""
+    lp = LayerSpec("p", K=4, C=2, P=6, Q=6, R=3, S=3, pad=1)
+    lc = LayerSpec("c", K=4, C=8, P=6, Q=6, R=3, S=3, pad=1)
+    arch = dram_pim(channels_per_layer=2, banks_per_channel=2,
+                    columns_per_bank=4)
+    rng = random.Random(seed)
+    mp = random_mapping(lp, arch, rng, 256)
+    mc = random_mapping(lc, arch, rng, 256)
+    return lp, mp, mc
+
+
+def test_exhaustive_no_intersection_is_ready_at_zero():
+    from repro.core.overlap import consumer_tiles
+
+    lp, mp, mc = _overhang_pair(0)
+    lo, hi = consumer_tiles(mc)
+    plo, _phi, r0 = IdentityMap().to_producer(lp, mc.layer, lo, hi)
+    none = (plo["K"] >= lp.K) & ~r0
+    assert none.any()   # the scenario actually occurs in this pair
+    step, ready0 = ready_steps_exhaustive(mp, mc)
+    # pre-fix: step[none] == -1 and ready0[none] stayed False
+    assert step.min() >= 0
+    assert ready0[none].all()
+    # intersecting spaces are untouched by the clamp
+    sa, ra = ready_steps_analytical(mp, mc)
+    both = ~ready0 & ~ra
+    assert np.array_equal(step[both], sa[both])
+
+
+def test_exhaustive_sentinel_spaces_not_charged_producer_completion():
+    """Scheduling consequence of the fix: the overhang spaces must not
+    inherit the producer's last finish time through index wraparound."""
+    _lp, mp, mc = _overhang_pair(0)
+    pp, pc = analyze(mp), analyze(mc)
+    fin_step = (np.arange(mp.n_steps) + 1.0) * pp.step_ns
+    step, r0 = ready_steps_exhaustive(mp, mc)
+    ready = np.where(r0, 0.0, fin_step[step] + pp.tile_move_ns)
+    none_ready = ready[r0]
+    assert np.all(none_ready == 0.0)
+    # and the resulting schedule is no worse than the pre-fix wraparound
+    wrap = np.where(r0, fin_step[-1], ready)
+    assert (overlapped_end(ready, pc.step_ns)
+            <= overlapped_end(wrap, pc.step_ns) + 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# digit_scan property coverage: the m == 1 fast path must agree with the
+# general multi-digit scan and with brute-force interval enumeration.
+# ---------------------------------------------------------------------------
+
+def _digit_brute(loops, lo, hi):
+    xs = np.arange(lo, hi + 1)
+    tot = np.zeros(xs.shape)
+    for n, blk, w in loops:
+        tot = tot + float(w) * ((xs // blk) % n)
+    return float(tot.max())
+
+
+@given(seed=st.integers(0, 10 ** 6))
+@settings(max_examples=30, deadline=None)
+def test_property_digit_scan_single_loop_fast_path(seed):
+    from repro.core.overlap import digit_scan
+
+    rng = random.Random(seed)
+    n1 = rng.choice([2, 3, 4, 5, 8])
+    blk = rng.choice([1, 2, 3, 4])
+    w1 = rng.choice([0, 1, 3, 7])
+    dim = n1 * blk
+    lo = rng.randrange(dim)
+    hi = rng.randrange(lo, dim)
+    loops = [(n1, blk, w1)]
+    los = np.array([lo])
+    his = np.array([hi])
+    fast = digit_scan(loops, los, his)          # m == 1 branch
+    # size-1 dummy loop contributes 0 everywhere but forces the general
+    # multi-digit path over the same interval
+    general = digit_scan(loops + [(1, 1, 0)], los, his)
+    assert float(fast[0]) == float(general[0])
+    assert float(fast[0]) == _digit_brute(loops, lo, hi)
+
+
+@given(seed=st.integers(0, 10 ** 6))
+@settings(max_examples=30, deadline=None)
+def test_property_digit_scan_multi_loop_vs_brute(seed):
+    from repro.core.overlap import digit_scan
+
+    rng = random.Random(seed)
+    m = rng.choice([2, 3])
+    sizes = [rng.choice([2, 3, 4]) for _ in range(m)]
+    # mixed-radix decomposition of the dim: loop j owns blocks of the
+    # product of the sizes inside it; like rect_loops, the list is
+    # outermost (most significant digit) first — the scan's prefix /
+    # suffix families rely on that ordering
+    blks, b = [], 1
+    for sz in sizes:
+        blks.append(b)
+        b *= sz
+    dim = b
+    loops = [(sz, blk, rng.choice([0, 1, 2, 5]))
+             for sz, blk in zip(sizes, blks)][::-1]
+    lo = rng.randrange(dim)
+    hi = rng.randrange(lo, dim)
+    got = digit_scan(loops, np.array([lo]), np.array([hi]))
+    assert float(got[0]) == _digit_brute(loops, lo, hi)
+
+
 @pytest.mark.parametrize("seed", range(4))
 def test_mode_ordering_on_fixed_chain(seed):
     """transform <= overlap <= original total_ns for the same mappings on

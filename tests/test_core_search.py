@@ -1,4 +1,6 @@
 """Whole-network search: modes, strategies, chain evaluation, BERT edges."""
+import dataclasses
+
 import numpy as np
 import pytest
 
@@ -116,3 +118,50 @@ def test_refinement_never_worse():
     ref = optimize_network(net, chain_edges(net), tiny_arch(),
                            cfg(mode="transform", refine_passes=1))
     assert ref.total_ns <= base.total_ns + 1e-6
+
+
+def test_use_exhaustive_overlap_changes_code_path(monkeypatch):
+    """SearchConfig.use_exhaustive_overlap routes the reference path's
+    ready-step analysis through OverlaPIM's exhaustive traversal (it was
+    once declared but never consulted — baseline comparisons silently ran
+    the fast path)."""
+    import repro.core.search as search_mod
+
+    calls = {"exh": 0, "ana": 0}
+    real_exh = search_mod.ready_steps_exhaustive
+    real_ana = search_mod.ready_steps_analytical
+
+    def count_exh(*a, **kw):
+        calls["exh"] += 1
+        return real_exh(*a, **kw)
+
+    def count_ana(*a, **kw):
+        calls["ana"] += 1
+        return real_ana(*a, **kw)
+
+    monkeypatch.setattr(search_mod, "ready_steps_exhaustive", count_exh)
+    monkeypatch.setattr(search_mod, "ready_steps_analytical", count_ana)
+
+    net = tiny_net()
+    small = cfg(n_candidates=3, max_steps=64, mode="overlap")
+    on = optimize_network(net, chain_edges(net), tiny_arch(),
+                          dataclasses.replace(small,
+                                              use_exhaustive_overlap=True))
+    assert calls["exh"] > 0 and calls["ana"] == 0
+
+    calls["exh"] = calls["ana"] = 0
+    off = optimize_network(net, chain_edges(net), tiny_arch(),
+                           dataclasses.replace(small, use_engine=False))
+    assert calls["exh"] == 0 and calls["ana"] > 0
+    # the exhaustive analysis is the oracle the analytical closed form
+    # reproduces, so both flags pick the same mappings and timings
+    assert on.total_ns == off.total_ns
+
+
+def test_engine_rejects_exhaustive_overlap():
+    from repro.core.engine import optimize_network_engine
+
+    net = tiny_net()
+    with pytest.raises(ValueError):
+        optimize_network_engine(net, chain_edges(net), tiny_arch(),
+                                cfg(use_exhaustive_overlap=True))
