@@ -105,6 +105,42 @@ def scoring_throughput():
                   f";sustained={t_ref / t_sust:.2f}x")
 
 
+def obs_overhead():
+    """Telemetry-overhead guard on the sustained scoring hot path. The
+    engine's per-candidate loops keep plain-int counters and publish
+    deltas only at search end (``publish_metrics``), so enabling the
+    metrics registry must not slow sustained ``score_forward_batch``
+    passes measurably; the derived column records the enabled/disabled
+    ratio (same pass, best of 5 each, telemetry on without a trace
+    sink). ``tests/test_obs.py`` enforces the structural half (zero
+    obs dispatches from the hot loop); this row tracks the wall-clock
+    half across PRs."""
+    from repro import obs
+
+    desc, done, scored, n = _scoring_setup()
+    eng = OverlapEngine()
+
+    def engine_pass():
+        t0 = time.perf_counter()
+        for i, pool, has_cons in scored:
+            eng.score_forward_batch(i, pool, desc.edges, done, "transform",
+                                    has_cons)
+        return time.perf_counter() - t0
+
+    engine_pass()                   # warm the memo tables
+    t_off = min(engine_pass() for _ in range(5))
+    obs.enable()                    # registry only, no trace sink
+    try:
+        t_on = min(engine_pass() for _ in range(5))
+        eng.publish_metrics()
+    finally:
+        obs.disable()
+    yield _emit("bench_search.obs_overhead_sustained", t_on / n * 1e6,
+                f"off_us={t_off / n * 1e6:.3f}"
+                f";on_us={t_on / n * 1e6:.3f}"
+                f";ratio={t_on / t_off:.3f}x")
+
+
 def e2e_speedup():
     """End-to-end optimize_network, engine vs pre-engine reference, on
     resnet18 mode=transform with one refine pass (where incremental chain

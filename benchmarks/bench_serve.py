@@ -1,0 +1,185 @@
+"""Mapping-service latency/throughput benchmark (``BENCH_serve.json``).
+
+Drives the serving stack the way a deployment client would — distinct
+cold requests, hot repeats, and a warm restart — and commits the
+client-observed numbers so the serving-path trajectory is tracked
+across PRs the same way ``BENCH_search.json`` tracks the search path:
+
+* ``cold_c1``    — N distinct requests (fresh journal), one client:
+  every request runs a real sweep; the baseline cost of an answer.
+* ``memo_c4``    — the same requests twice over, four concurrent
+  clients: all served from the response memo (the hot-path regime the
+  coalescing/memo layers exist for).
+* ``journal_c2`` — a *new* service instance over the same journal
+  path, two concurrent clients: each request re-proposes its points
+  and serves them all from the journal with zero new mapping searches
+  (the warm-restart regime).
+
+Latency percentiles are client-side (submit-to-response, sorted-sample
+p50/p99), so they include queueing — what a caller actually waits.
+Sweeps run over a 4-point restricted ``dram_pim`` space with tiny
+per-point search budgets (the ``tests/test_serve_service.py`` scale);
+the numbers track the *serving machinery*, not paper-scale search.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Dict, List, Tuple
+
+from repro.dse import ParamSpace
+from repro.serve import MappingRequest, MappingService
+
+from . import record
+from .common import csv_row
+
+BENCH_SERVE_JSON = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_serve.json")
+
+#: distinct cold requests per run (seeds 1..N — the seed enters the
+#: journal content key, so each is a genuinely new sweep)
+N_REQUESTS = 6
+
+
+def _bench_space() -> ParamSpace:
+    """Restricted 4-point ``dram_pim`` space: one sweep costs four
+    fast-loop mapping searches, not a paper-scale budget."""
+    return ParamSpace(
+        family="dram_pim",
+        axes={"channels_per_layer": (1, 2),
+              "banks_per_channel": (2, 4),
+              "columns_per_bank": (64, 128)},
+        constraints=[lambda p: p["channels_per_layer"]
+                     * p["banks_per_channel"] <= 4],
+        defaults={"channels_per_layer": 2, "banks_per_channel": 2,
+                  "columns_per_bank": 64},
+    )
+
+
+def _requests(n: int) -> List[MappingRequest]:
+    return [MappingRequest(network="resnet18", explorer="grid", budget=4,
+                           seed=s, n_candidates=3, max_steps=256)
+            for s in range(1, n + 1)]
+
+
+def _service(journal: str, max_workers: int = 1) -> MappingService:
+    return MappingService(journal_path=journal, max_workers=max_workers,
+                          space_overrides={"dram_pim": _bench_space()})
+
+
+def _drive(svc: MappingService, reqs: List[MappingRequest],
+           concurrency: int) -> Tuple[List, List[float], float]:
+    """Fire ``reqs`` at the service from ``concurrency`` client threads;
+    returns (responses, per-request client latencies, phase wall)."""
+    out: List = [None] * len(reqs)
+    lat = [0.0] * len(reqs)
+
+    def one(i: int) -> None:
+        t0 = time.perf_counter()
+        out[i] = svc.request(reqs[i])
+        lat[i] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    if concurrency <= 1:
+        for i in range(len(reqs)):
+            one(i)
+    else:
+        with ThreadPoolExecutor(max_workers=concurrency) as pool:
+            list(pool.map(one, range(len(reqs))))
+    return out, lat, time.perf_counter() - t0
+
+
+def _pct(lat: List[float], q: float) -> float:
+    s = sorted(lat)
+    return s[min(len(s) - 1, int(q * len(s)))]
+
+
+def _phase(out: List, lat: List[float], wall: float) -> Dict:
+    served: Dict[str, int] = {}
+    for r in out:
+        served[r.served_from] = served.get(r.served_from, 0) + 1
+    # memo hits replay the original response (whose evaluated/proposed
+    # describe the *first* sweep); only non-memo responses did work now
+    fresh = [r for r in out if r.served_from != "memo"]
+    return {
+        "n": len(out),
+        "wall_s": round(wall, 4),
+        "rps": round(len(out) / wall, 2),
+        "p50_ms": round(_pct(lat, 0.50) * 1e3, 3),
+        "p99_ms": round(_pct(lat, 0.99) * 1e3, 3),
+        "evaluated": sum(r.evaluated for r in fresh),
+        "from_journal": sum(r.from_journal for r in fresh),
+        "proposed": sum(r.proposed for r in fresh),
+        "served_from": dict(sorted(served.items())),
+    }
+
+
+def serve_latency():
+    """The three serving phases; rows mirror into BENCH_search.json,
+    the full phase dicts into the committed BENCH_serve.json."""
+    root = tempfile.mkdtemp(prefix="bench-serve-")
+    journal = os.path.join(root, "service.jsonl")
+    reqs = _requests(N_REQUESTS)
+    phases: Dict[str, Dict] = {}
+    try:
+        svc = _service(journal)
+        try:
+            out, lat, wall = _drive(svc, reqs, concurrency=1)
+            phases["cold_c1"] = _phase(out, lat, wall)
+            out, lat, wall = _drive(svc, reqs * 2, concurrency=4)
+            phases["memo_c4"] = _phase(out, lat, wall)
+            stats = dict(svc.stats)
+        finally:
+            svc.close()
+        # warm restart: a fresh instance over the same journal path
+        svc2 = _service(journal, max_workers=2)
+        try:
+            out, lat, wall = _drive(svc2, reqs, concurrency=2)
+            phases["journal_c2"] = _phase(out, lat, wall)
+        finally:
+            svc2.close()
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+    total = sum(p["n"] for p in phases.values())
+    memo_served = sum(p["served_from"].get("memo", 0)
+                      for p in phases.values())
+    jp = phases["journal_c2"]
+    doc = {
+        "schema": 1,
+        "request": {"network": "resnet18", "explorer": "grid",
+                    "budget": 4, "n_candidates": 3, "max_steps": 256,
+                    "space": "dram_pim restricted (4 points)",
+                    "distinct_requests": N_REQUESTS},
+        "phases": phases,
+        "rates": {
+            "memo_hit_rate": round(memo_served / total, 4),
+            "journal_hit_rate": round(
+                jp["from_journal"] / max(1, jp["proposed"]), 4),
+        },
+        "service_stats": stats,
+    }
+    tmp = BENCH_SERVE_JSON + ".tmp"
+    with open(tmp, "w", encoding="utf-8") as fh:
+        json.dump(doc, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    os.replace(tmp, BENCH_SERVE_JSON)
+
+    for name in sorted(phases):
+        p = phases[name]
+        derived = (f"p50_ms={p['p50_ms']};p99_ms={p['p99_ms']}"
+                   f";rps={p['rps']};evaluated={p['evaluated']}"
+                   f";served_from=" + "/".join(
+                       f"{k}:{v}" for k, v in p["served_from"].items()))
+        record.update_rows({f"bench_serve.{name}": {
+            "us_per_call": round(p["p50_ms"] * 1e3, 3),
+            "derived": derived}})
+        yield csv_row(f"bench_serve.{name}", p["p50_ms"] * 1e3, derived)
+    yield csv_row("bench_serve.rates", 0.0,
+                  f"memo_hit_rate={doc['rates']['memo_hit_rate']}"
+                  f";journal_hit_rate={doc['rates']['journal_hit_rate']}"
+                  f";json={os.path.basename(BENCH_SERVE_JSON)}")

@@ -27,6 +27,10 @@ for _p in (_ROOT, os.path.join(_ROOT, "src")):
 
 #: the documented surface — every module here must be fully covered
 MODULES = [
+    "repro.obs",
+    "repro.obs.metrics",
+    "repro.obs.report",
+    "repro.obs.trace",
     "repro.dse",
     "repro.dse.driver",
     "repro.dse.explore",

@@ -1,0 +1,113 @@
+"""Observability smoke checker: validate a traced run's telemetry.
+
+Takes the JSONL trace (``--trace-out``) and metrics snapshot
+(``--metrics-out``) left behind by a ``run.py dse`` sweep and
+cross-checks them against the sweep's known outcome:
+
+* every trace line parses as JSON and is a well-formed span/event
+  (name, nesting depth, non-negative duration),
+* at least one ``dse.sweep`` span was recorded,
+* the ``dse.evaluated`` / ``dse.journal_hits`` counters equal the
+  values the sweep printed (``--expect-evaluated`` /
+  ``--expect-from-journal``),
+* whenever anything was evaluated, the engine published its cache
+  counters and the per-point ``dse.eval_seconds`` histogram holds
+  exactly one observation per evaluation.
+
+Exit 1 on any mismatch — the CI-sized proof that the telemetry a
+future perf investigation would reach for is actually being recorded,
+and recorded consistently. (The determinism half — telemetry must not
+change results — is enforced by ``tests/test_obs.py``.)
+"""
+import argparse
+import json
+import sys
+from typing import List
+
+
+def check_trace(path: str, errors: List[str]) -> List[dict]:
+    """Parse every trace line; collect malformed ones into ``errors``."""
+    events = []
+    try:
+        fh = open(path, "r", encoding="utf-8")
+    except OSError as e:
+        errors.append(f"trace unreadable: {e}")
+        return events
+    with fh:
+        for lineno, line in enumerate(fh, 1):
+            try:
+                ev = json.loads(line)
+            except json.JSONDecodeError:
+                errors.append(f"trace line {lineno}: unparsable JSON")
+                continue
+            kind = ev.get("ev")
+            if kind not in ("span", "event"):
+                errors.append(f"trace line {lineno}: ev={kind!r}")
+                continue
+            if "name" not in ev:
+                errors.append(f"trace line {lineno}: missing name")
+            if kind == "span" and not (ev.get("dur_s", -1) >= 0
+                                       and ev.get("depth", -1) >= 0):
+                errors.append(f"trace line {lineno}: bad span fields")
+            events.append(ev)
+    if not any(e.get("name") == "dse.sweep" and e.get("ev") == "span"
+               for e in events):
+        errors.append("no dse.sweep span in the trace")
+    return events
+
+
+def main() -> int:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--trace", required=True,
+                   help="JSONL trace written by --trace-out")
+    p.add_argument("--metrics", required=True,
+                   help="snapshot JSON written by --metrics-out")
+    p.add_argument("--expect-evaluated", type=int, default=None,
+                   metavar="N", help="required dse.evaluated count")
+    p.add_argument("--expect-from-journal", type=int, default=None,
+                   metavar="N", help="required dse.journal_hits count")
+    args = p.parse_args()
+
+    errors: List[str] = []
+    events = check_trace(args.trace, errors)
+
+    try:
+        with open(args.metrics, "r", encoding="utf-8") as fh:
+            snap = json.load(fh)
+    except (OSError, json.JSONDecodeError) as e:
+        errors.append(f"metrics snapshot unreadable: {e}")
+        snap = {}
+    counters = snap.get("counters") or {}
+
+    for name, expect in (("dse.evaluated", args.expect_evaluated),
+                         ("dse.journal_hits",
+                          args.expect_from_journal)):
+        if expect is None:
+            continue
+        got = int(counters.get(name, 0))
+        if got != expect:
+            errors.append(f"{name}={got}, expected {expect}")
+
+    evaluated = int(counters.get("dse.evaluated", 0))
+    if evaluated:
+        if not any(k.startswith("engine.") for k in counters):
+            errors.append("evaluations ran but the engine published "
+                          "no cache counters")
+        n_lat = int(((snap.get("histograms") or {})
+                     .get("dse.eval_seconds") or {}).get("count", 0))
+        if n_lat != evaluated:
+            errors.append(f"dse.eval_seconds holds {n_lat} "
+                          f"observations for {evaluated} evaluations")
+
+    for e in errors:
+        print(f"check_obs: FAIL {e}")
+    if errors:
+        return 1
+    print(f"check_obs: OK ({len(events)} trace events, "
+          f"evaluated={evaluated}, "
+          f"journal_hits={int(counters.get('dse.journal_hits', 0))})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

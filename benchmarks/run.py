@@ -7,6 +7,7 @@ Entry points::
     python benchmarks/run.py serve-dse [...]    # one mapping-service request
     python benchmarks/run.py dse-worker [...]   # join a distributed sweep
     python benchmarks/run.py dse-coordinator [...]  # drive one
+    python benchmarks/run.py obs-report [...]   # render saved telemetry
 
 All also work as ``python -m benchmarks.run`` with ``PYTHONPATH=src``;
 run as a plain script the repo root and ``src/`` are bootstrapped onto
@@ -23,7 +24,11 @@ processes or machines sharing one directory (DESIGN.md Section 10).
 ``serve-dse`` answers one deployment request through the mapping
 service (``repro.serve.MappingService``, DESIGN.md Section 11) — an
 HTTP-less local client whose repeat invocations are served from the
-service journal with zero new mapping searches.
+service journal with zero new mapping searches. Every subcommand takes
+``--trace-out PATH`` / ``--metrics-out PATH`` (``repro.obs``): spans go
+to a JSONL trace, the end-of-run metrics snapshot to a JSON file that
+``obs-report`` renders as cache hit rates, latency percentiles and
+fleet/service counters (``--prometheus`` for scrape-format text).
 """
 import argparse
 import dataclasses
@@ -37,17 +42,132 @@ for _p in (_ROOT, os.path.join(_ROOT, "src")):
         sys.path.insert(0, _p)
 
 
-def bench_main() -> None:
+def _obs_flags(p: argparse.ArgumentParser) -> argparse.ArgumentParser:
+    """Attach the shared observability flags (``repro.obs``) to a
+    subcommand parser. Giving either path flag turns telemetry on for
+    the run; with neither, the process keeps the zero-overhead no-op
+    default."""
+    g = p.add_argument_group("observability (repro.obs)")
+    g.add_argument("--trace-out", default=None, metavar="PATH",
+                   help="write tracing spans as JSONL to PATH "
+                        "(enables telemetry for this run)")
+    g.add_argument("--metrics-out", default=None, metavar="PATH",
+                   help="write the end-of-run metrics snapshot as JSON "
+                        "to PATH (enables telemetry; defaults to "
+                        "dse_runs/obs_metrics.json whenever telemetry "
+                        "is on) — render it with 'run.py obs-report'")
+    g.add_argument("--obs-sample", type=int, default=1, metavar="N",
+                   help="keep every Nth span per span name "
+                        "(deterministic stride, never RNG; metrics "
+                        "counters are always exact)")
+    return p
+
+
+DEFAULT_METRICS_OUT = os.path.join("dse_runs", "obs_metrics.json")
+
+
+def _setup_obs(args):
+    """Enable process-wide telemetry per the CLI flags; returns a
+    finalizer that writes the registry snapshot to ``--metrics-out``
+    and turns telemetry back off. With no obs flags the finalizer is a
+    no-op and telemetry stays disabled."""
+    import json
+    trace_out = getattr(args, "trace_out", None)
+    metrics_out = getattr(args, "metrics_out", None)
+    if not trace_out and not metrics_out:
+        return lambda: None
+    from repro import obs
+    metrics_out = metrics_out or DEFAULT_METRICS_OUT
+    obs.enable(trace_path=trace_out,
+               sample_every=max(1, getattr(args, "obs_sample", 1)))
+
+    def finish() -> None:
+        reg = obs.registry()
+        snap = reg.snapshot() if reg is not None else {}
+        obs.disable()          # flushes + closes the trace sink
+        d = os.path.dirname(metrics_out)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(metrics_out, "w", encoding="utf-8") as fh:
+            json.dump(snap, fh, sort_keys=True)
+            fh.write("\n")
+        msg = f"obs: metrics -> {metrics_out}"
+        if trace_out:
+            msg += f" trace -> {trace_out}"
+        print(msg)
+
+    return finish
+
+
+def _print_fleet(stats) -> None:
+    """One-line fleet-health summary after a distributed sweep (the
+    worker counters used to die with the worker processes)."""
+    fleet = (stats or {}).get("fleet")
+    if not fleet:
+        return
+
+    def fmt(v):
+        return f"{v:.4g}" if isinstance(v, float) else str(v)
+
+    print("dse: fleet " + " ".join(f"{k}={fmt(v)}"
+                                   for k, v in sorted(fleet.items())))
+
+
+def obs_report_main(argv) -> None:
+    """Render a saved metrics snapshot (``--metrics-out``) as the
+    human-readable observability report, or as Prometheus text
+    exposition for scraping."""
+    import json
+    from repro import obs
+
+    p = argparse.ArgumentParser(
+        prog="run.py obs-report",
+        description="Render a repro.obs metrics snapshot (cache hit "
+                    "rates, latency percentiles, fleet/service "
+                    "counters) written by --metrics-out.")
+    p.add_argument("--metrics", default=DEFAULT_METRICS_OUT,
+                   metavar="PATH", help="snapshot JSON to render "
+                   "(default: %(default)s)")
+    p.add_argument("--prometheus", action="store_true",
+                   help="emit Prometheus text exposition instead of "
+                        "the text report")
+    args = p.parse_args(argv)
+    try:
+        with open(args.metrics, "r", encoding="utf-8") as fh:
+            snap = json.load(fh)
+    except FileNotFoundError:
+        print(f"obs-report: no snapshot at {args.metrics} — run a "
+              "subcommand with --metrics-out/--trace-out first",
+              file=sys.stderr)
+        sys.exit(2)
+    render = obs.render_prometheus if args.prometheus else obs.render_report
+    sys.stdout.write(render(snap))
+
+
+def bench_main(argv=()) -> None:
+    args = _obs_flags(argparse.ArgumentParser(
+        prog="run.py bench",
+        description="Paper-figure CSV suite.")).parse_args(argv)
+    finish_obs = _setup_obs(args)
+    try:
+        _bench_suite()
+    finally:
+        finish_obs()
+
+
+def _bench_suite() -> None:
     # one function per paper table/figure
-    from benchmarks import (bench_kernels, bench_search, paper_figs,
-                            roofline_report)
+    from benchmarks import (bench_kernels, bench_search, bench_serve,
+                            paper_figs, roofline_report)
 
     benches = [
         bench_search.scoring_throughput,
+        bench_search.obs_overhead,
         bench_search.e2e_speedup,
         bench_search.search_wall,
         bench_search.objective_frontier,
         bench_search.worker_scaling,
+        bench_serve.serve_latency,
         paper_figs.fig4_motivation,
         paper_figs.fig10_overall,
         paper_figs.fig11_vs_overlapim,
@@ -131,7 +251,7 @@ def _dse_parser() -> argparse.ArgumentParser:
     p.add_argument("--frontier-out", default=None, metavar="PATH",
                    help="also write the frontier's canonical JSON to "
                         "PATH (byte-comparable across runs/workers)")
-    return p
+    return _obs_flags(p)
 
 
 def _dse_config_from_args(args):
@@ -217,16 +337,22 @@ def dse_main(argv) -> None:
 
     cfg = dataclasses.replace(base, network=args.network,
                               journal_path=journal_path)
-    res = execute_sweep(cfg, distributed=args.distributed,
-                        shared_dir=shared_dir if args.distributed else None,
-                        batch_size=args.batch_size,
-                        lease_ttl_s=args.lease_ttl)
+    finish_obs = _setup_obs(args)
+    try:
+        res = execute_sweep(cfg, distributed=args.distributed,
+                            shared_dir=shared_dir if args.distributed
+                            else None,
+                            batch_size=args.batch_size,
+                            lease_ttl_s=args.lease_ttl)
+    finally:
+        finish_obs()
     print(summarize(res))
     print(frontier_table(res.frontier))
     if args.distributed:
         print(f"dse: shared-dir={shared_dir} "
               f"workers={args.distributed} "
               f"batches={res.stats['batches']}")
+        _print_fleet(res.stats)
     else:
         print(f"dse: journal={cfg.journal_path} entries={_journal_len(cfg)}")
     _write_frontier(res, args.frontier_out)
@@ -294,9 +420,14 @@ def dse_coordinator_main(argv) -> None:
     dist = DistribConfig(root=args.shared_dir, batch_size=args.batch_size,
                          lease_ttl_s=args.lease_ttl,
                          timeout_s=args.timeout)
-    res = run_coordinator(_dse_config_from_args(args), dist)
+    finish_obs = _setup_obs(args)
+    try:
+        res = run_coordinator(_dse_config_from_args(args), dist)
+    finally:
+        finish_obs()
     print(summarize(res))
     print(frontier_table(res.frontier))
+    _print_fleet(res.stats)
     _write_frontier(res, args.frontier_out)
 
 
@@ -348,6 +479,7 @@ def serve_dse_main(argv) -> None:
                         "per-field flags)")
     p.add_argument("--json", action="store_true",
                    help="print the full MappingResponse as JSON")
+    _obs_flags(p)
     args = p.parse_args(argv)
 
     from repro.dse.driver import JOURNAL_ROOT
@@ -365,11 +497,14 @@ def serve_dse_main(argv) -> None:
             distributed=args.distributed,
             include_mapping=args.include_mapping)
     journal = args.journal or os.path.join(JOURNAL_ROOT, "service.jsonl")
+    # telemetry before the service: it binds its registry at construction
+    finish_obs = _setup_obs(args)
     svc = MappingService(journal_path=journal)
     try:
         resp = svc.request(req)
     finally:
         svc.close()
+        finish_obs()
     print(f"serve-dse: request={resp.request_key[:12]} "
           f"status={resp.status} served_from={resp.served_from} "
           f"evaluated={resp.evaluated} from_journal={resp.from_journal} "
@@ -403,12 +538,14 @@ def main() -> None:
         dse_worker_main(argv[1:])
     elif argv and argv[0] == "dse-coordinator":
         dse_coordinator_main(argv[1:])
+    elif argv and argv[0] == "obs-report":
+        obs_report_main(argv[1:])
     elif not argv or argv[0] == "bench":
-        bench_main()
+        bench_main(argv[1:] if argv else [])
     else:
         print(f"unknown subcommand {argv[0]!r}; use 'bench', 'dse', "
-              "'serve-dse', 'dse-worker' or 'dse-coordinator'",
-              file=sys.stderr)
+              "'serve-dse', 'dse-worker', 'dse-coordinator' or "
+              "'obs-report'", file=sys.stderr)
         sys.exit(2)
 
 

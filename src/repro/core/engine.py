@@ -52,6 +52,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .. import obs
 from .arch import ArchSpec
 from .dataspace import (rect_bounds, rect_bounds_separable,
                         rect_bounds_stacked)
@@ -70,6 +71,16 @@ from .workload import LayerSpec, OUTPUT_DIMS
 # the dense per-candidate path (pathological mappings whose class product
 # approaches the full (banks x steps x steps) grid)
 _GRID_GUARD = 1 << 19
+
+# engine-local stat keys (plain ints in ``OverlapEngine.stats``; the
+# sustained scoring path must stay free of telemetry dispatch, so hot
+# loops bump these dict cells and ``publish_metrics`` forwards deltas
+# to the obs registry at search boundaries)
+_STAT_KEYS = ("tiles_hit", "tiles_miss", "tail_hit", "tail_miss",
+              "proj_hit", "proj_miss", "ready_hit", "ready_miss",
+              "sepcls_hit", "sepcls_miss", "score_hit", "score_miss",
+              "score_pool_hit", "batch_scored", "dense_scored",
+              "guard_fallback", "evictions")
 
 
 def _unique_inverse(codes: np.ndarray, bound: int):
@@ -173,6 +184,11 @@ class OverlapEngine:
         # digit-contribution arrays arange(size) * weight
         self._ar: Dict[int, np.ndarray] = {}
         self._dc: Dict = {}
+        #: always-on memo hit/miss accounting (plain ints — cheaper than
+        #: telemetry dispatch in the hot loops; ``publish_metrics``
+        #: forwards deltas to ``repro.obs``)
+        self.stats: Dict[str, int] = {k: 0 for k in _STAT_KEYS}
+        self._published: Dict[str, int] = {k: 0 for k in _STAT_KEYS}
 
     def _arange(self, n: int) -> np.ndarray:
         a = self._ar.get(n)
@@ -219,7 +235,27 @@ class OverlapEngine:
         if bundle is not None and bundle is self._cur:
             self._cur = _ArchCaches()
             self._arch = None
+        if bundle is not None:
+            self.stats["evictions"] += 1
+            obs.event("engine.evict_arch", arch=key,
+                      remaining=len(self._bundles))
         return bundle is not None
+
+    def publish_metrics(self, registry=None) -> None:
+        """Forward ``stats`` deltas since the last publish into the obs
+        registry as ``engine.*`` counters (plus the live bundle-count
+        gauge). Called at search boundaries — never from hot loops — so
+        the sustained scoring path performs zero telemetry dispatch.
+        No-op when telemetry is disabled and no ``registry`` is given."""
+        reg = registry if registry is not None else obs.registry()
+        if reg is None:
+            return
+        for k, v in self.stats.items():
+            d = v - self._published[k]
+            if d:
+                reg.counter("engine." + k).inc(d)
+                self._published[k] = v
+        reg.gauge("engine.arch_bundles").set(len(self._bundles))
 
     def perf(self, m: Mapping) -> LayerPerf:
         return self._perf.analyze(m)
@@ -229,7 +265,10 @@ class OverlapEngine:
         key = m.cache_key
         hit = self._cur.tiles.get(key)
         if hit is None:
+            self.stats["tiles_miss"] += 1
             hit = self._cur.tiles[key] = rect_bounds(m)
+        else:
+            self.stats["tiles_hit"] += 1
         return hit
 
     def tail(self, m: Mapping) -> float:
@@ -237,7 +276,10 @@ class OverlapEngine:
         key = m.cache_key
         hit = self._cur.tail.get(key)
         if hit is None:
+            self.stats["tail_miss"] += 1
             hit = self._cur.tail[key] = stream_tail_fraction(m)
+        else:
+            self.stats["tail_hit"] += 1
         return hit
 
     def projection(self, m_c: Mapping, cmap: CoordMap, p_layer: LayerSpec):
@@ -247,7 +289,10 @@ class OverlapEngine:
         self._check_arch(m_c)
         key = (m_c.cache_key, cmap.key(), p_layer)
         hit = self._cur.proj.get(key)
-        if hit is None:
+        if hit is not None:
+            self.stats["proj_hit"] += 1
+        else:
+            self.stats["proj_miss"] += 1
             lo, hi = self.tiles(m_c)
             plo, phi, ready0 = cmap.to_producer(p_layer, m_c.layer, lo, hi)
             plo = {d: np.clip(plo[d], 0, p_layer.dim(d) - 1)
@@ -268,6 +313,8 @@ class OverlapEngine:
         out: List = [self._cur.proj.get((m.cache_key, ck, p_layer))
                      for m in reps]
         miss = [k for k in range(len(reps)) if out[k] is None]
+        self.stats["proj_hit"] += len(reps) - len(miss)
+        self.stats["proj_miss"] += len(miss)
         if not miss:
             return out
         mm = [reps[k] for k in miss]
@@ -306,7 +353,10 @@ class OverlapEngine:
         cmap = cmap or IdentityMap()
         key = (m_p.cache_key, m_c.cache_key, cmap.key())
         hit = self._cur.ready.get(key)
-        if hit is None:
+        if hit is not None:
+            self.stats["ready_hit"] += 1
+        else:
+            self.stats["ready_miss"] += 1
             if type(cmap) is IdentityMap:
                 hit = self._ready_steps_identity(m_p, m_c, cmap)
             else:
@@ -428,6 +478,8 @@ class OverlapEngine:
         for k, m in enumerate(cands):
             if out[k] is None:
                 missing.setdefault(m.cache_key, m)
+        self.stats["sepcls_hit"] += sum(s is not None for s in out)
+        self.stats["sepcls_miss"] += len(missing)
         if not missing:
             return out
         layer = next(iter(missing.values())).layer
@@ -619,6 +671,8 @@ class OverlapEngine:
         for m in cands:
             if m.cache_key not in self._cur.tail:
                 missing.setdefault(m.cache_key, m)
+        self.stats["tail_hit"] += len(cands) - len(missing)
+        self.stats["tail_miss"] += len(missing)
         if missing:
             ms = list(missing.values())
             for m, f in zip(ms, stream_tail_fractions(ms)):
@@ -639,6 +693,7 @@ class OverlapEngine:
         res: List = [None] * len(cands)
         sel = [k for k in range(len(cands))
                if structs[k].cells <= _GRID_GUARD]
+        self.stats["guard_fallback"] += len(cands) - len(sel)
         if not sel:
             return res
         ssel = [structs[k] for k in sel]
@@ -773,8 +828,10 @@ class OverlapEngine:
             key = (pk, m.cache_key, ck)
             hit = self._cur.ready.get(key)
             if hit is not None:
+                self.stats["ready_hit"] += 1
                 out[k] = hit
             else:
+                self.stats["ready_miss"] += 1
                 todo.setdefault(key, []).append(k)  # dedupes equal mappings
         if todo:
             keys = list(todo)
@@ -955,6 +1012,7 @@ class OverlapEngine:
         phit = self._cur.score.get(pkey)
         if phit is not None and all([a is b for a, b in zip(phit[0],
                                                             prods)]):
+            self.stats["score_pool_hit"] += 1
             return phit[1].copy()
         out = np.empty(len(cands), dtype=np.float64)
         todo: List[int] = []
@@ -967,6 +1025,8 @@ class OverlapEngine:
                 out[k] = hit[1]
             else:
                 todo.append(k)
+        self.stats["score_hit"] += len(cands) - len(todo)
+        self.stats["score_miss"] += len(todo)
         if not todo:
             self._cur.score[pkey] = (prods, out.copy())
             return out
@@ -991,9 +1051,12 @@ class OverlapEngine:
             m = cands[k]
             sc = scored[j]
             if sc is None:
+                self.stats["dense_scored"] += 1
                 sc = self._score_forward_one(i, m, edges, done, mode,
                                              has_consumer, objective,
                                              blend_alpha)
+            else:
+                self.stats["batch_scored"] += 1
             out[k] = sc
             skey = (mode, objective, blend_alpha, m.cache_key,
                     has_consumer, pids)
@@ -1103,63 +1166,72 @@ def optimize_network_engine(layers: Sequence[LayerSpec],
     chosen: Dict[int, Mapping] = {}
     done: Dict[int, LayerResult] = {}
     for i in order:
-        cands = candidates(layers[i], arch, cfg, salt=i)
-        if i in backward_part:
-            scores = np.array([eng.score_backward(i, m, edges, chosen,
-                                                  cfg.mode, cfg.objective,
-                                                  cfg.blend_alpha)
-                               for m in cands])
-        else:
-            avail = all(e.producer in done for e in edges[i])
-            has_cons = bool(_consumers_of(edges, i))
-            if avail:
-                scores = eng.score_forward_batch(i, cands, edges, done,
-                                                 cfg.mode, has_cons,
-                                                 cfg.objective,
-                                                 cfg.blend_alpha)
+        with obs.span("search.layer", layer=i, mode=cfg.mode,
+                      strategy=cfg.strategy,
+                      phase="backward" if i in backward_part else "forward"):
+            cands = candidates(layers[i], arch, cfg, salt=i)
+            if i in backward_part:
+                scores = np.array([eng.score_backward(i, m, edges, chosen,
+                                                      cfg.mode,
+                                                      cfg.objective,
+                                                      cfg.blend_alpha)
+                                   for m in cands])
             else:
-                perfs = [eng.perf(m) for m in cands]
-                scores = np.array([combine_objective(
-                    cfg.objective, p.sequential_ns, p.energy_pj,
-                    cfg.blend_alpha) for p in perfs])
-        # np.argmin == first minimum == min(cands, key=...) tie-breaking
-        chosen[i] = cands[int(np.argmin(scores))]
-        if all(e.producer in done for e in edges[i]):
-            done[i] = eng.layer_result(i, chosen[i], edges, done, cfg.mode)
+                avail = all(e.producer in done for e in edges[i])
+                has_cons = bool(_consumers_of(edges, i))
+                if avail:
+                    scores = eng.score_forward_batch(i, cands, edges, done,
+                                                     cfg.mode, has_cons,
+                                                     cfg.objective,
+                                                     cfg.blend_alpha)
+                else:
+                    perfs = [eng.perf(m) for m in cands]
+                    scores = np.array([combine_objective(
+                        cfg.objective, p.sequential_ns, p.energy_pj,
+                        cfg.blend_alpha) for p in perfs])
+            # np.argmin == first minimum == min(cands, key=...) tie-break
+            chosen[i] = cands[int(np.argmin(scores))]
+            if all(e.producer in done for e in edges[i]):
+                done[i] = eng.layer_result(i, chosen[i], edges, done,
+                                           cfg.mode)
     cur_maps = [chosen[i] for i in range(n)]
     result = eng.evaluate_chain(cur_maps, edges, cfg.mode)
 
     # coordinate-descent refinement: trials differ from the current chain
     # in one layer, so only that layer + transitive consumers re-evaluate
-    for _ in range(cfg.refine_passes if cfg.mode != "original" else 0):
+    for rp in range(cfg.refine_passes if cfg.mode != "original" else 0):
         improved = False
         cur_res = result
-        for i in range(n):
-            rcfg = dataclasses.replace(
-                cfg, n_candidates=cfg.refine_candidates)
-            cands = candidates(layers[i], arch, rcfg, salt=i + 7919)
-            cands.append(chosen[i])
-            best_m = chosen[i]
-            best_t = result.objective_value(cfg.objective, cfg.blend_alpha)
-            for m in cands:
-                trial_maps = list(cur_maps)
-                trial_maps[i] = m
-                r = eng.evaluate_chain(trial_maps, edges, cfg.mode,
-                                       reuse=(cur_res.layers, cur_maps))
-                sc = r.objective_value(cfg.objective, cfg.blend_alpha)
-                if sc < best_t - 1e-9:
-                    best_m, best_t = m, sc
-            if best_m is not chosen[i]:
-                chosen[i] = best_m
-                new_maps = [chosen[j] for j in range(n)]
-                cur_res = eng.evaluate_chain(
-                    new_maps, edges, cfg.mode,
-                    reuse=(cur_res.layers, cur_maps))
-                cur_maps = new_maps
-                improved = True
+        with obs.span("search.refine_pass", mode=cfg.mode,
+                      strategy=cfg.strategy, pass_idx=rp):
+            for i in range(n):
+                rcfg = dataclasses.replace(
+                    cfg, n_candidates=cfg.refine_candidates)
+                cands = candidates(layers[i], arch, rcfg, salt=i + 7919)
+                cands.append(chosen[i])
+                best_m = chosen[i]
+                best_t = result.objective_value(cfg.objective,
+                                                cfg.blend_alpha)
+                for m in cands:
+                    trial_maps = list(cur_maps)
+                    trial_maps[i] = m
+                    r = eng.evaluate_chain(trial_maps, edges, cfg.mode,
+                                           reuse=(cur_res.layers, cur_maps))
+                    sc = r.objective_value(cfg.objective, cfg.blend_alpha)
+                    if sc < best_t - 1e-9:
+                        best_m, best_t = m, sc
+                if best_m is not chosen[i]:
+                    chosen[i] = best_m
+                    new_maps = [chosen[j] for j in range(n)]
+                    cur_res = eng.evaluate_chain(
+                        new_maps, edges, cfg.mode,
+                        reuse=(cur_res.layers, cur_maps))
+                    cur_maps = new_maps
+                    improved = True
         result = eng.evaluate_chain(cur_maps, edges, cfg.mode,
                                     reuse=(cur_res.layers, cur_maps))
         if not improved:
             break
     result.objective = cfg.objective
+    eng.publish_metrics()
     return result

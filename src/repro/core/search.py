@@ -21,6 +21,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .. import obs
 from .arch import ArchSpec
 from .mapping import Mapping, heuristic_mapping, random_mapping
 from .overlap import (Edge, overlapped_end, ready_steps_analytical,
@@ -338,13 +339,17 @@ def optimize_network(layers: Sequence[LayerSpec],
                      arch: ArchSpec,
                      cfg: Optional[SearchConfig] = None) -> NetworkResult:
     cfg = cfg or SearchConfig()
-    # the OverlaPIM-baseline analysis has no batched engine twin: fall
-    # back to the reference path (the engine itself raises if handed the
-    # flag directly)
-    if cfg.use_engine and not cfg.use_exhaustive_overlap:
-        from .engine import optimize_network_engine  # lazy: avoids cycle
-        return optimize_network_engine(layers, edges, arch, cfg)
-    return _optimize_network_reference(layers, edges, arch, cfg)
+    with obs.span("search.optimize", n_layers=len(layers), mode=cfg.mode,
+                  strategy=cfg.strategy, objective=cfg.objective,
+                  engine=cfg.use_engine
+                  and not cfg.use_exhaustive_overlap):
+        # the OverlaPIM-baseline analysis has no batched engine twin:
+        # fall back to the reference path (the engine itself raises if
+        # handed the flag directly)
+        if cfg.use_engine and not cfg.use_exhaustive_overlap:
+            from .engine import optimize_network_engine  # lazy: no cycle
+            return optimize_network_engine(layers, edges, arch, cfg)
+        return _optimize_network_reference(layers, edges, arch, cfg)
 
 
 def _optimize_network_reference(layers: Sequence[LayerSpec],

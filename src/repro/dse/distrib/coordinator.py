@@ -38,15 +38,74 @@ import os
 import time
 from typing import Dict, List, Optional, Sequence
 
+from ... import obs
+from ...obs import merge_snapshots, quantile
 from ..explore import (DSEConfig, DSEResult, ProposalStream, key_for,
                        proposal_stream)
 from ..pareto import ParetoFrontier
 from ..persist import RunJournal, SharedDirBackend
 from ..space import ParamSpace, get_space
-from .lease import clear_stop, post_manifest, request_stop
-from .worker import WorkerConfig, worker_entry, worker_loop
+from .lease import clear_stop, post_manifest, read_json, request_stop
+from .worker import WorkerConfig, metrics_dir, worker_entry, worker_loop
 
 WORKER_MODES = ("process", "thread", "external")
+
+
+def clear_metrics(root: str) -> None:
+    """Drop metrics shards a previous sweep left in a reused shared dir
+    (coordinator start-up — mirrors ``clear_stop``), so the end-of-sweep
+    fleet summary covers exactly this sweep's workers."""
+    mdir = metrics_dir(root)
+    try:
+        names = os.listdir(mdir)
+    except FileNotFoundError:
+        return
+    for n in names:
+        if n.endswith(".json"):
+            try:
+                os.remove(os.path.join(mdir, n))
+            except FileNotFoundError:
+                pass
+
+
+def collect_fleet(root: str) -> Optional[Dict]:
+    """Merge every worker's metrics shard under ``<root>/metrics/`` into
+    the coordinator's fleet-health view.
+
+    Returns ``{"summary": ..., "snapshot": ...}`` — the summary sums the
+    workers' loop counters (batches, evaluated, lease claims/steals/
+    expiries, dedup skips) and adds batch-evaluate latency percentiles;
+    the snapshot is the element-wise metrics merge, ready for
+    ``obs.render_report``. None when no worker published a shard."""
+    mdir = metrics_dir(root)
+    try:
+        names = sorted(os.listdir(mdir))
+    except FileNotFoundError:
+        return None
+    shards = []
+    for n in names:
+        if n.endswith(".json"):
+            body = read_json(os.path.join(mdir, n))
+            if body is not None:
+                shards.append(body)
+    if not shards:
+        return None
+    snap = merge_snapshots([s.get("snapshot") or {} for s in shards])
+    totals: Dict[str, float] = {}
+    for s in shards:
+        for k, v in (s.get("stats") or {}).items():
+            totals[k] = totals.get(k, 0) + v
+    summary: Dict = {"workers_reported": len(shards)}
+    summary.update({k: int(v) for k, v in sorted(totals.items())})
+    h = (snap.get("histograms") or {}).get("fleet.batch_eval_seconds")
+    if h and h.get("count"):
+        summary["batch_eval_p50_s"] = quantile(h["bounds"], h["counts"],
+                                               0.50)
+        summary["batch_eval_p99_s"] = quantile(h["bounds"], h["counts"],
+                                               0.99)
+        summary["batch_eval_mean_s"] = h["sum"] / h["count"]
+    snap["gauges"]["fleet.workers"] = float(len(shards))
+    return {"summary": summary, "snapshot": snap}
 
 
 @dataclasses.dataclass
@@ -174,7 +233,8 @@ def run_distributed(dcfg: DSEConfig, dist: DistribConfig,
     ``run_dse`` (records in proposal order, baseline first)."""
     space = space or get_space(dcfg.family)
     os.makedirs(dist.root, exist_ok=True)
-    clear_stop(dist.root)   # a finished sweep leaves STOP behind
+    clear_stop(dist.root)      # a finished sweep leaves STOP behind
+    clear_metrics(dist.root)   # ... and its workers' metrics shards
     backend = SharedDirBackend(dist.root, writer_id="coordinator")
     journal = RunJournal(backend=backend)
     stream: ProposalStream = proposal_stream(space, dcfg)
@@ -227,6 +287,14 @@ def run_distributed(dcfg: DSEConfig, dist: DistribConfig,
         "workers": dist.n_workers,
         "batches": n_batches,
     }
+    # fold the workers' metrics shards into the end-of-sweep summary
+    # (previously the workers computed these counters and dropped them)
+    fleet = collect_fleet(dist.root)
+    if fleet is not None:
+        stats["fleet"] = fleet["summary"]
+        reg = obs.registry()
+        if reg is not None:
+            reg.merge_snapshot(fleet["snapshot"])
     return DSEResult(config=dcfg, records=records, frontier=frontier,
                      baseline=records[0], stats=stats)
 

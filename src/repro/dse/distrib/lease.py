@@ -153,7 +153,12 @@ class LeaseBoard:
         self.root = root
         self.worker_id = worker_id
         self.ttl_s = ttl_s
+        #: plain counters, harvested into per-worker metrics shards by
+        #: ``worker_loop`` (no process-global telemetry here — thread-mode
+        #: workers would double-count a shared registry)
         self.n_stolen = 0
+        self.n_claims = 0
+        self.n_expired = 0
         # done markers are write-once: cache positives, re-check misses
         self._done_cache: set = set()
         os.makedirs(os.path.join(root, "leases"), exist_ok=True)
@@ -189,6 +194,7 @@ class LeaseBoard:
         if cur is not None:
             if cur.get("expires_at", 0.0) > time.time():
                 return False       # live lease held by someone else
+            self.n_expired += 1
             # expired: exactly one thief wins this rename
             tomb = f"{path}.stolen-{uuid.uuid4().hex[:8]}"
             try:
@@ -207,6 +213,7 @@ class LeaseBoard:
         with os.fdopen(fd, "w", encoding="utf-8") as fh:
             json.dump(self._lease_body(), fh)
             fh.flush()
+        self.n_claims += 1
         return True
 
     def _owns(self, batch_id: str) -> bool:

@@ -28,10 +28,32 @@ from typing import Dict, Optional
 
 from ...core.arch import ArchSpec
 from ...core.engine import OverlapEngine
+from ...obs import Registry
 from ..explore import DSEConfig, _make_record, _search_arch
 from ..persist import RunJournal, SharedDirBackend
 from ..space import DesignPoint
-from .lease import LeaseBoard, ManifestCache, stop_token
+from .lease import LeaseBoard, ManifestCache, atomic_write_json, stop_token
+
+METRICS_DIRNAME = "metrics"
+
+
+def metrics_dir(root: str) -> str:
+    """The shared-dir subdirectory holding per-worker metrics shards."""
+    return os.path.join(root, METRICS_DIRNAME)
+
+
+def write_metrics_shard(root: str, worker_id: str, stats: Dict,
+                        registry: Registry) -> str:
+    """Publish one worker's metrics shard (atomic rename) into
+    ``<root>/metrics/<worker_id>.json``: the loop counters plus a full
+    registry snapshot. The worker uses a *worker-local* registry — never
+    the process-global one — so thread-mode fleets (coordinator workers
+    in one process) cannot double-count when the coordinator merges the
+    shards back into a fleet summary."""
+    path = os.path.join(metrics_dir(root), f"{worker_id}.json")
+    atomic_write_json(path, {"worker": worker_id, "stats": stats,
+                             "snapshot": registry.snapshot()})
+    return path
 
 
 @dataclasses.dataclass
@@ -93,6 +115,9 @@ def worker_loop(wcfg: WorkerConfig) -> Dict[str, int]:
     board = LeaseBoard(wcfg.root, wid, ttl_s=wcfg.lease_ttl_s)
     manifest_cache = ManifestCache(wcfg.root)
     engine = OverlapEngine()
+    # worker-LOCAL registry: fleet metrics flow only through the shard
+    # this worker publishes at exit (see ``write_metrics_shard``)
+    reg = Registry()
     stats = {"batches": 0, "evaluated": 0, "stolen": 0,
              "skipped_done": 0}
     idle_since = time.monotonic()
@@ -126,7 +151,7 @@ def worker_loop(wcfg: WorkerConfig) -> Dict[str, int]:
                 gate_failures = 0
         try:
             progressed = _work_pass(wcfg, board, manifest_cache, journal,
-                                    engine, stats)
+                                    engine, stats, reg)
         finally:
             if gate is not None and acquired:
                 gate.release()
@@ -145,12 +170,21 @@ def worker_loop(wcfg: WorkerConfig) -> Dict[str, int]:
         # idle backoff: a worker with nothing claimable must not flood
         # the shared filesystem while its peers compute
         sleep_s = min(sleep_s * 1.5, max(wcfg.poll_s, 0.25))
+    stats["claims"] = board.n_claims
+    stats["expired"] = board.n_expired
+    for k in ("batches", "evaluated", "stolen", "skipped_done",
+              "claims", "expired"):
+        if stats[k]:
+            reg.counter("fleet." + k).inc(stats[k])
+    engine.publish_metrics(registry=reg)
+    write_metrics_shard(wcfg.root, wid, stats, reg)
     return stats
 
 
 def _work_pass(wcfg: WorkerConfig, board: LeaseBoard,
                manifest_cache: ManifestCache, journal: RunJournal,
-               engine: OverlapEngine, stats: Dict[str, int]) -> bool:
+               engine: OverlapEngine, stats: Dict[str, int],
+               reg: Optional[Registry] = None) -> bool:
     """One scan over the published manifests; returns True if anything
     was completed (evaluated or dedup-marked done)."""
     progressed = False
@@ -186,6 +220,7 @@ def _work_pass(wcfg: WorkerConfig, board: LeaseBoard,
             dcfg = dcfg_from_manifest(man)
             stolen_midway = False
             n_done = 0
+            t_batch = time.perf_counter()
             for it in todo:
                 rec = evaluate_manifest_item(it, dcfg, engine)
                 journal.record(it["key"], rec)
@@ -198,6 +233,9 @@ def _work_pass(wcfg: WorkerConfig, board: LeaseBoard,
                 if not board.renew(bid):
                     stolen_midway = True
                     break
+            if reg is not None and n_done:
+                reg.histogram("fleet.batch_eval_seconds").observe(
+                    time.perf_counter() - t_batch)
             journal.publish()          # one atomic shard per batch
             if not stolen_midway:
                 board.mark_done(bid, {"n_evaluated": n_done})

@@ -37,6 +37,7 @@ import random
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from .. import obs
 from ..core.arch import ArchSpec
 from ..core.engine import OverlapEngine, optimize_network_engine
 from ..core.perf_model import arch_area_proxy, arch_power_proxy
@@ -263,6 +264,7 @@ class _Evaluator:
         if self._pool is not None:
             self._pool.shutdown()
             self._pool = None
+        self.engine.publish_metrics()
 
     def __call__(self, points: Sequence[DesignPoint]) -> List[Dict]:
         """Scores in point order; journal hits cost nothing."""
@@ -271,24 +273,31 @@ class _Evaluator:
         out: List[Optional[Dict]] = [self.journal.get(k) for k in keys]
         misses = [i for i, r in enumerate(out) if r is None]
         self.n_from_journal += len(points) - len(misses)
+        obs.inc("dse.proposed", len(points))
+        obs.inc("dse.journal_hits", len(points) - len(misses))
         if misses:
             archs = [built[i] for i in misses]
-            if self._pool is not None:
-                dd = dataclasses.asdict(self.dcfg)
-                fields = list(self._pool.map(
-                    _pool_eval, [(dd, a.to_dict()) for a in archs]))
-            else:
-                fields = []
-                for a in archs:
-                    fields.append(_search_arch(a, self.dcfg,
-                                               engine=self.engine))
-                    # scored once per sweep: evict to bound memory while
-                    # the engine's PerfCache keeps cross-arch reuse
-                    self.engine.evict_arch(a)
+            with obs.span("dse.evaluate_batch", n=len(misses),
+                          network=self.dcfg.network, mode=self.dcfg.mode):
+                if self._pool is not None:
+                    dd = dataclasses.asdict(self.dcfg)
+                    fields = list(self._pool.map(
+                        _pool_eval, [(dd, a.to_dict()) for a in archs]))
+                else:
+                    fields = []
+                    for a in archs:
+                        fields.append(_search_arch(a, self.dcfg,
+                                                   engine=self.engine))
+                        # scored once per sweep: evict to bound memory
+                        # while the engine's PerfCache keeps cross-arch
+                        # reuse
+                        self.engine.evict_arch(a)
             for i, a, f in zip(misses, archs, fields):
                 rec = _make_record(points[i], self.dcfg, a, f)
                 out[i] = self.journal.record(keys[i], rec)
+                obs.observe("dse.eval_seconds", f["wall_s"])
             self.n_evaluated += len(misses)
+            obs.inc("dse.evaluated", len(misses))
             # no-op for file journals; shard-publish for shared-dir ones
             self.journal.publish()
         return out  # type: ignore[return-value]
@@ -501,6 +510,10 @@ def run_dse(dcfg: DSEConfig, space: Optional[ParamSpace] = None,
         return (deadline_s is not None
                 and time.perf_counter() - t0 >= deadline_s)
 
+    sweep_span = obs.span("dse.sweep", family=dcfg.family,
+                          network=dcfg.network, explorer=dcfg.explorer,
+                          budget=dcfg.budget)
+    sweep_span.__enter__()
     try:
         stream = proposal_stream(space, dcfg)
         while True:
@@ -528,6 +541,7 @@ def run_dse(dcfg: DSEConfig, space: Optional[ParamSpace] = None,
             stream.observe(batch, recs)
     finally:
         ev.close()
+        sweep_span.__exit__(None, None, None)
     baseline = records[0]
     stats = {
         "proposed": len(records),

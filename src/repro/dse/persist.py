@@ -36,8 +36,11 @@ from __future__ import annotations
 import hashlib
 import json
 import os
+import time
 import uuid
 from typing import Dict, Iterator, List, Optional, Tuple
+
+from .. import obs
 
 
 def content_key(network: str, mode: str, strategy: str, seed: int,
@@ -328,12 +331,16 @@ class RunJournal:
         self._records[key] = rec
         if self.backend is not None:
             self.backend.append(rec)
+        obs.inc("journal.records")
         return rec
 
     def publish(self) -> None:
         """Make records staged by ``record`` visible to other readers."""
         if self.backend is not None:
+            t0 = time.perf_counter()
             self.backend.publish()
+            obs.observe("journal.publish_seconds",
+                        time.perf_counter() - t0)
 
     def refresh(self) -> int:
         """Merge records published by other writers; returns how many
@@ -341,12 +348,15 @@ class RunJournal:
         (content keys make any collision bit-identical anyway)."""
         if self.backend is None:
             return 0
+        t0 = time.perf_counter()
         fresh = self.backend.load_new()
         n_new = 0
         for k, rec in fresh.items():
             if k not in self._records:
                 n_new += 1
             self._records[k] = rec
+        obs.observe("journal.refresh_seconds", time.perf_counter() - t0)
+        obs.inc("journal.refresh_new", n_new)
         return n_new
 
     def compact(self) -> Tuple[int, int]:

@@ -1,0 +1,42 @@
+"""Stdlib-only telemetry: metrics registry, span tracing, reporting.
+
+The observability layer for the whole reproduction (DESIGN.md
+Section 12). Three parts:
+
+* :mod:`repro.obs.metrics` — ``Registry`` of counters / gauges /
+  fixed-bucket mergeable histograms, snapshot/merge, Prometheus text
+  exposition.
+* :mod:`repro.obs.trace` — nestable ``span()`` timing with a JSONL
+  ``TraceSink``, counter-based deterministic sampling, and the
+  process-global enable/disable switch (off ⇒ shared no-ops).
+* :mod:`repro.obs.report` — ``render_report`` turns a snapshot into
+  the ``run.py obs-report`` terminal summary.
+
+Typical call-site usage::
+
+    from repro import obs
+    obs.inc("dse.evaluated", 3)
+    with obs.span("dse.sweep", budget=8):
+        ...
+
+All helpers dispatch through the *current* telemetry, so modules
+instrumented at import time see a registry enabled later via
+``obs.enable(trace_path=..., sample_every=...)``. Hard contract:
+telemetry observes, it never steers — results are byte-identical with
+telemetry on, off, or sampled (enforced by ``tests/test_obs.py``).
+"""
+from .metrics import (Counter, Gauge, Histogram, Registry,
+                      merge_snapshots, quantile, render_prometheus)
+from .report import render_report
+from .trace import (NullTelemetry, Telemetry, TraceSink, current, disable,
+                    enable, enabled, event, inc, observe, registry,
+                    set_gauge, span)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "Registry",
+    "merge_snapshots", "quantile", "render_prometheus",
+    "render_report",
+    "NullTelemetry", "Telemetry", "TraceSink",
+    "current", "disable", "enable", "enabled", "event",
+    "inc", "observe", "registry", "set_gauge", "span",
+]

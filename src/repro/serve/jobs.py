@@ -74,13 +74,16 @@ class Job:
 class JobQueue:
     """Keyed thread-pool executor with in-flight coalescing."""
 
-    def __init__(self, max_workers: int = 1):
+    def __init__(self, max_workers: int = 1, depth_gauge=None):
         self._pool = ThreadPoolExecutor(max_workers=max_workers,
                                         thread_name_prefix="mapping-job")
         self._lock = threading.Lock()
         self._inflight: Dict[str, Job] = {}
         self.n_submitted = 0
         self.n_coalesced = 0
+        # optional ``repro.obs`` Gauge tracking the in-flight depth
+        # (set under the queue lock on every enqueue/finish)
+        self._depth_gauge = depth_gauge
 
     def submit(self, key: str, fn: Callable[[], Any]) -> "tuple[Job, bool]":
         """Enqueue ``fn`` under ``key``; returns ``(job, coalesced)``.
@@ -97,6 +100,8 @@ class JobQueue:
                 return job, True
             job = Job(key)
             self._inflight[key] = job
+            if self._depth_gauge is not None:
+                self._depth_gauge.set(len(self._inflight))
         try:
             self._pool.submit(self._run, job, fn)
         except BaseException as e:
@@ -131,3 +136,5 @@ class JobQueue:
             # (result() returns immediately) or starts a fresh one
             with self._lock:
                 self._inflight.pop(job.key, None)
+                if self._depth_gauge is not None:
+                    self._depth_gauge.set(len(self._inflight))

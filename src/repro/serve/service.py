@@ -40,8 +40,11 @@ import hashlib
 import json
 import os
 import threading
+import time
 from typing import Dict, List, Optional
 
+from .. import obs
+from ..obs import Registry
 from ..dse.driver import (JOURNAL_ROOT, execute_sweep, frontier_points,
                           sweep_summary)
 from ..dse.explore import DSEConfig, DSEResult
@@ -193,10 +196,29 @@ class MappingService:
         # request (deadline repeats, warm restarts) that picks the same
         # (network, search config, arch) winner
         self._mappings: Dict[str, List[Dict]] = {}
-        self._queue = JobQueue(max_workers=max_workers)
+        # service metrics live in the process-global registry when
+        # telemetry is enabled at construction time, else in a private
+        # one — either way the ``stats`` property always counts
+        self._reg: Registry = obs.registry() or Registry()
+        self._queue = JobQueue(
+            max_workers=max_workers,
+            depth_gauge=self._reg.gauge("serve.queue.depth"))
         self._lock = threading.Lock()
-        self.stats = {"requests": 0, "memo_hits": 0, "coalesced": 0,
-                      "sweeps": 0}
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        """Legacy counter view (requests / memo_hits / coalesced /
+        sweeps) backed by the ``serve.*`` registry counters."""
+        c = self._reg.counter
+        return {"requests": int(c("serve.requests").value),
+                "memo_hits": int(c("serve.memo_hits").value),
+                "coalesced": int(c("serve.coalesced").value),
+                "sweeps": int(c("serve.sweeps").value)}
+
+    def metrics_snapshot(self) -> Dict:
+        """Full snapshot of the service's metrics registry (counters,
+        queue-depth gauge, request-latency histogram)."""
+        return self._reg.snapshot()
 
     # -- client surface -----------------------------------------------------
 
@@ -205,19 +227,21 @@ class MappingService:
         ``result()`` is the ``MappingResponse``. Memoized requests get
         a pre-completed job; identical in-flight requests coalesce."""
         key = req.cache_key()
+        t0 = time.perf_counter()
+        self._reg.counter("serve.requests").inc()
         with self._lock:
-            self.stats["requests"] += 1
             memo = self._memo.get(key)
         if memo is not None:
-            with self._lock:
-                self.stats["memo_hits"] += 1
+            self._reg.counter("serve.memo_hits").inc()
+            self._reg.counter("serve.served_from.memo").inc()
+            self._reg.histogram("serve.request_seconds").observe(
+                time.perf_counter() - t0)
             return Job.completed(key, dataclasses.replace(
                 memo, served_from="memo"))
-        job, coalesced = self._queue.submit(key,
-                                            lambda: self._run(req, key))
+        job, coalesced = self._queue.submit(
+            key, lambda: self._run(req, key, t0))
         if coalesced:
-            with self._lock:
-                self.stats["coalesced"] += 1
+            self._reg.counter("serve.coalesced").inc()
         return job
 
     def request(self, req: MappingRequest,
@@ -234,23 +258,25 @@ class MappingService:
     def _space(self, family: str) -> ParamSpace:
         return self._spaces.get(family) or get_space(family)
 
-    def _run(self, req: MappingRequest, key: str) -> MappingResponse:
-        with self._lock:
-            self.stats["sweeps"] += 1
-        cfg = req.dse_config()
-        if req.distributed > 0:
-            if req.family in self._spaces:
-                raise ValueError("space_overrides are serial-only "
-                                 "(spaces do not pickle to workers)")
-            res = execute_sweep(
-                cfg, distributed=req.distributed,
-                shared_dir=os.path.join(self.shared_root, key[:16]))
-            self._absorb(res)
-        else:
-            res = execute_sweep(cfg, space=self._space(req.family),
-                                journal=self.journal,
-                                deadline_s=req.deadline_s)
-        resp = self._respond(req, key, res)
+    def _run(self, req: MappingRequest, key: str,
+             t0: Optional[float] = None) -> MappingResponse:
+        self._reg.counter("serve.sweeps").inc()
+        with obs.span("serve.request", network=req.network,
+                      family=req.family, budget=req.budget):
+            cfg = req.dse_config()
+            if req.distributed > 0:
+                if req.family in self._spaces:
+                    raise ValueError("space_overrides are serial-only "
+                                     "(spaces do not pickle to workers)")
+                res = execute_sweep(
+                    cfg, distributed=req.distributed,
+                    shared_dir=os.path.join(self.shared_root, key[:16]))
+                self._absorb(res)
+            else:
+                res = execute_sweep(cfg, space=self._space(req.family),
+                                    journal=self.journal,
+                                    deadline_s=req.deadline_s)
+            resp = self._respond(req, key, res)
         # deadline-truncated answers are NOT memoized: a repeat must
         # re-run (replaying the journal prefix near-free) so repeated
         # deadline requests make monotone progress toward the
@@ -258,6 +284,10 @@ class MappingService:
         if not resp.deadline_hit:
             with self._lock:
                 self._memo[key] = resp
+        self._reg.counter("serve.served_from." + resp.served_from).inc()
+        if t0 is not None:
+            self._reg.histogram("serve.request_seconds").observe(
+                time.perf_counter() - t0)
         return resp
 
     def _absorb(self, res: DSEResult) -> None:

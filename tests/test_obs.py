@@ -1,0 +1,424 @@
+"""Telemetry subsystem tests (repro.obs) and its determinism contract.
+
+Three layers:
+
+* **Unit** — registry counters/gauges/histograms, snapshot merging,
+  quantile interpolation, Prometheus exposition, the JSONL trace sink,
+  counter-based span sampling, and the report renderer.
+* **Hot-path guard** — the engine's sustained scoring loop must make
+  *zero* dispatches into ``repro.obs`` (stats are plain dict ints,
+  published as deltas at search end), so telemetry can never tax the
+  inner loop; a loose wall-clock ratio backs the structural check.
+* **Determinism** — DESIGN.md Section 12: telemetry observes, never
+  steers. The engine must match the pre-engine reference, and a
+  distributed sweep its serial twin, *byte-identically* with tracing
+  enabled (including sampled), and a sweep's canonical frontier JSON
+  must not change when telemetry is toggled.
+"""
+import json
+
+import pytest
+
+from repro import obs
+from repro.core import (LayerSpec, SearchConfig, chain_edges, dram_pim,
+                        optimize_network)
+from repro.core.engine import OverlapEngine
+from repro.core.search import _consumers_of, candidates
+from repro.dse import (DSEConfig, DistribConfig, ParamSpace,
+                       run_distributed, run_dse)
+from repro.obs import (Registry, TraceSink, merge_snapshots, quantile,
+                       render_prometheus, render_report)
+from repro.obs.metrics import DEFAULT_BOUNDS
+from repro.obs.trace import _NOOP_SPAN
+
+
+@pytest.fixture(autouse=True)
+def _obs_clean():
+    """Every test starts and ends with telemetry disabled — the
+    process-global switch must never leak across tests."""
+    obs.disable()
+    yield
+    obs.disable()
+
+
+@pytest.fixture
+def tiny_net(monkeypatch):
+    """Patch the network lookup everywhere evaluations happen (same
+    scheme as tests/test_dse_distrib.py)."""
+    import repro.dse.explore as ex
+
+    layers = [
+        LayerSpec("l0", K=8, C=4, P=8, Q=8, R=3, S=3, pad=1),
+        LayerSpec("l1", K=8, C=8, P=8, Q=8, R=3, S=3, pad=1),
+    ]
+    desc = type("D", (), {"layers": layers,
+                          "edges": chain_edges(layers)})()
+    monkeypatch.setattr(ex, "describe", lambda name: desc)
+
+
+def tiny_space() -> ParamSpace:
+    return ParamSpace(
+        family="dram_pim",
+        axes={
+            "channels_per_layer": (1, 2),
+            "banks_per_channel": (2, 4),
+            "columns_per_bank": (64, 128),
+        },
+        defaults={"channels_per_layer": 2, "banks_per_channel": 2,
+                  "columns_per_bank": 64},
+    )
+
+
+def tiny_dcfg(**kw) -> DSEConfig:
+    base = dict(network="tiny", mode="transform", budget=6,
+                n_candidates=3, max_steps=256, seed=0, explorer="evolve",
+                population=3)
+    base.update(kw)
+    return DSEConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# Registry / metrics units.
+# ---------------------------------------------------------------------------
+
+def test_counter_gauge_histogram_basics():
+    reg = Registry()
+    reg.counter("a").inc()
+    reg.counter("a").inc(2.5)
+    reg.gauge("g").set(7)
+    h = reg.histogram("h")
+    for v in (1e-6, 1e-3, 1.0):
+        h.observe(v)
+    snap = reg.snapshot()
+    assert snap["counters"]["a"] == 3.5
+    assert snap["gauges"]["g"] == 7.0
+    assert snap["histograms"]["h"]["count"] == 3
+    assert snap["histograms"]["h"]["sum"] == pytest.approx(1.001001)
+    assert sum(snap["histograms"]["h"]["counts"]) == 3
+    # get-or-create returns the same object
+    assert reg.counter("a") is reg.counter("a")
+    # snapshots are JSON-safe
+    json.dumps(snap)
+
+
+def test_histogram_bounds_mismatch_raises():
+    reg = Registry()
+    reg.histogram("h", bounds=(1.0, 2.0))
+    reg.histogram("h", bounds=(1.0, 2.0))   # same bounds: fine
+    with pytest.raises(ValueError):
+        reg.histogram("h", bounds=(1.0, 3.0))
+
+
+def test_quantile_interpolation_and_edges():
+    assert quantile((1.0, 2.0), [0, 0, 0], 0.5) == 0.0       # empty
+    # 10 observations uniform in the (1, 2] bucket
+    assert quantile((1.0, 2.0), [0, 10, 0], 0.5) == pytest.approx(1.5)
+    # first bucket interpolates down to 0.0
+    assert quantile((1.0, 2.0), [10, 0, 0], 0.5) == pytest.approx(0.5)
+    # overflow mass reports the top bound
+    assert quantile((1.0, 2.0), [0, 0, 5], 0.99) == 2.0
+    # default bounds cover the microsecond..minute range
+    assert DEFAULT_BOUNDS[0] <= 1e-6 and DEFAULT_BOUNDS[-1] >= 100.0
+
+
+def test_merge_snapshots_counters_add_gauges_max_hists_add():
+    a, b = Registry(), Registry()
+    a.counter("c").inc(2)
+    b.counter("c").inc(3)
+    a.gauge("g").set(5)
+    b.gauge("g").set(2)
+    a.histogram("h").observe(0.5)
+    b.histogram("h").observe(0.5)
+    m = merge_snapshots([a.snapshot(), b.snapshot(), {}])
+    assert m["counters"]["c"] == 5.0
+    assert m["gauges"]["g"] == 5.0
+    assert m["histograms"]["h"]["count"] == 2
+    assert m["histograms"]["h"]["sum"] == pytest.approx(1.0)
+
+
+def test_render_prometheus_shape():
+    reg = Registry()
+    reg.counter("dse.evaluated").inc(4)
+    reg.gauge("serve.queue.depth").set(1)
+    reg.histogram("h", bounds=(1.0, 2.0)).observe(1.5)
+    text = render_prometheus(reg.snapshot())
+    assert "# TYPE repro_dse_evaluated_total counter" in text
+    assert "repro_dse_evaluated_total 4" in text
+    assert "repro_serve_queue_depth 1" in text
+    assert 'repro_h_bucket{le="2"} 1' in text
+    assert 'repro_h_bucket{le="+Inf"} 1' in text
+    assert "repro_h_count 1" in text
+    assert render_prometheus({}) == ""
+
+
+def test_render_report_sections():
+    assert render_report({}) == "(no metrics recorded)\n"
+    reg = Registry()
+    reg.counter("engine.tail_hit").inc(3)
+    reg.counter("engine.tail_miss").inc(1)
+    reg.counter("dse.evaluated").inc(2)
+    reg.histogram("serve.request_seconds").observe(0.25)
+    reg.counter("serve.requests").inc(1)
+    text = render_report(reg.snapshot())
+    assert "hit rate" in text and "75.0%" in text
+    assert "dse" in text and "serve" in text
+
+
+# ---------------------------------------------------------------------------
+# Tracing: JSONL sink, nesting, sampling, global switch.
+# ---------------------------------------------------------------------------
+
+def _read_events(path):
+    with open(path, "r", encoding="utf-8") as fh:
+        return [json.loads(line) for line in fh]
+
+
+def test_span_jsonl_nesting_and_events(tmp_path):
+    trace = str(tmp_path / "trace.jsonl")
+    obs.enable(trace_path=trace)
+    with obs.span("outer", a=1):
+        with obs.span("inner"):
+            pass
+        obs.event("mark", x="y")
+    obs.disable()
+    evs = _read_events(trace)
+    by_name = {e["name"]: e for e in evs}
+    assert by_name["inner"]["depth"] == 1
+    assert by_name["outer"]["depth"] == 0
+    assert by_name["outer"]["a"] == 1
+    assert by_name["outer"]["dur_s"] >= by_name["inner"]["dur_s"] >= 0
+    assert by_name["mark"]["ev"] == "event" and by_name["mark"]["x"] == "y"
+    # spans also feed span.<name> duration histograms
+    snap = obs.current().registry if obs.enabled() else None
+    assert snap is None                       # disabled again
+
+
+def test_span_sampling_is_counter_based(tmp_path):
+    trace = str(tmp_path / "trace.jsonl")
+    obs.enable(trace_path=trace, sample_every=3)
+    for _ in range(7):
+        with obs.span("s"):
+            pass
+    obs.disable()
+    evs = _read_events(trace)
+    assert len(evs) == 3      # spans 0, 3 and 6 of 7 survive the stride
+    # metrics are never sampled: only emitted spans hit the histogram,
+    # but plain counters always count
+    obs.enable()
+    for _ in range(7):
+        obs.inc("c")
+    assert obs.registry().snapshot()["counters"]["c"] == 7.0
+
+
+def test_disabled_is_total_noop(tmp_path):
+    assert not obs.enabled()
+    assert obs.registry() is None
+    obs.inc("x")
+    obs.observe("y", 1.0)
+    obs.set_gauge("z", 1.0)
+    obs.event("e")
+    with obs.span("s", k=1):
+        pass                   # shared no-op span, nothing written
+    assert obs.registry() is None
+
+
+def test_metrics_without_sink():
+    obs.enable()               # registry only
+    assert obs.enabled() and obs.registry() is not None
+    with obs.span("s"):        # no sink: no-op span, no histogram
+        pass
+    obs.inc("c", 2)
+    snap = obs.registry().snapshot()
+    assert snap["counters"]["c"] == 2.0
+    assert "span.s" not in snap["histograms"]
+
+
+def test_trace_sink_reopens_after_close(tmp_path):
+    path = str(tmp_path / "t.jsonl")
+    sink = TraceSink(path)
+    sink.write({"a": 1})
+    sink.close()
+    sink.write({"b": 2})
+    sink.close()
+    assert len(_read_events(path)) == 2
+
+
+# ---------------------------------------------------------------------------
+# Engine publication: delta semantics, zero hot-path dispatch.
+# ---------------------------------------------------------------------------
+
+def _small_arch():
+    return dram_pim(channels_per_layer=2, banks_per_channel=2,
+                    columns_per_bank=64)
+
+
+def _conv_chain():
+    return [
+        LayerSpec("l0", K=8, C=4, P=8, Q=8, R=3, S=3, pad=1),
+        LayerSpec("l1", K=8, C=8, P=8, Q=8, R=3, S=3, pad=1),
+        LayerSpec("l2", K=16, C=8, P=4, Q=4, R=3, S=3, stride=2, pad=1),
+    ]
+
+
+def _sustained_setup(n_candidates=8):
+    layers = _conv_chain()
+    edges = chain_edges(layers)
+    arch = _small_arch()
+    cfg = SearchConfig(n_candidates=n_candidates, seed=0, max_steps=512,
+                       mode="transform")
+    res = optimize_network(layers, edges, arch, cfg)
+    done = {i: lr for i, lr in enumerate(res.layers)}
+    scored = [(i, candidates(layers[i], arch, cfg, salt=i),
+               bool(_consumers_of(edges, i)))
+              for i in range(len(layers)) if edges[i]]
+    return edges, done, scored
+
+
+def test_publish_metrics_publishes_deltas_once():
+    eng = OverlapEngine()
+    edges, done, scored = _sustained_setup()
+    for i, pool, has_cons in scored:
+        eng.score_forward_batch(i, pool, edges, done, "transform",
+                                has_cons)
+    reg = Registry()
+    eng.publish_metrics(registry=reg)
+    first = reg.snapshot()["counters"]
+    assert first.get("engine.score_miss", 0) > 0
+    # publishing again without new work adds nothing (delta semantics)
+    eng.publish_metrics(registry=reg)
+    assert reg.snapshot()["counters"] == first
+    # with telemetry disabled and no explicit registry: a silent no-op
+    eng.publish_metrics()
+
+
+def test_sustained_scoring_makes_zero_obs_dispatches(monkeypatch):
+    """The structural half of the <5% overhead guarantee: neither the
+    cold nor the memo-hit scoring pass may call into ``repro.obs`` at
+    all — engine stats are plain dict ints until ``publish_metrics``."""
+    eng = OverlapEngine()
+    edges, done, scored = _sustained_setup()   # before patching: the
+    # setup's own optimize_network legitimately opens search spans
+    calls = []
+    for fn in ("inc", "observe", "set_gauge", "event", "span"):
+        monkeypatch.setattr(obs, fn,
+                            lambda *a, _f=fn, **k: calls.append(_f)
+                            or _NOOP_SPAN)
+    for _ in range(2):          # cold pass, then the sustained regime
+        for i, pool, has_cons in scored:
+            eng.score_forward_batch(i, pool, edges, done, "transform",
+                                    has_cons)
+    assert calls == []
+    assert eng.stats["score_pool_hit"] > 0      # the memo regime ran
+
+
+def test_sustained_scoring_overhead_is_bounded():
+    """Wall-clock half, deliberately loose (a gross-regression tripwire
+    only — ``bench_search.obs_overhead`` tracks the real number): the
+    same sustained pass with telemetry enabled must stay within 2x of
+    disabled."""
+    import time
+
+    eng = OverlapEngine()
+    edges, done, scored = _sustained_setup(n_candidates=16)
+
+    def one_pass():
+        t0 = time.perf_counter()
+        for _ in range(20):
+            for i, pool, has_cons in scored:
+                eng.score_forward_batch(i, pool, edges, done,
+                                        "transform", has_cons)
+        return time.perf_counter() - t0
+
+    one_pass()                  # warm the memo tables
+    t_off = min(one_pass() for _ in range(3))
+    obs.enable()
+    t_on = min(one_pass() for _ in range(3))
+    obs.disable()
+    assert t_on <= 2.0 * t_off, (t_on, t_off)
+
+
+# ---------------------------------------------------------------------------
+# Fleet shards: worker-local registries merged by the coordinator.
+# ---------------------------------------------------------------------------
+
+def test_fleet_shard_write_and_collect(tmp_path):
+    from repro.dse.distrib.coordinator import clear_metrics, collect_fleet
+    from repro.dse.distrib.worker import write_metrics_shard
+
+    root = str(tmp_path)
+    assert collect_fleet(root) is None          # no shards yet
+    for wid, n in (("w0", 3), ("w1", 5)):
+        reg = Registry()
+        reg.counter("fleet.evaluated").inc(n)
+        reg.histogram("fleet.batch_eval_seconds").observe(0.1 * n)
+        write_metrics_shard(root, wid, {"evaluated": n, "batches": 1},
+                            reg)
+    fleet = collect_fleet(root)
+    assert fleet["summary"]["workers_reported"] == 2
+    assert fleet["summary"]["evaluated"] == 8
+    assert fleet["summary"]["batches"] == 2
+    assert fleet["summary"]["batch_eval_p50_s"] > 0
+    snap = fleet["snapshot"]
+    assert snap["counters"]["fleet.evaluated"] == 8.0
+    assert snap["gauges"]["fleet.workers"] == 2.0
+    clear_metrics(root)
+    assert collect_fleet(root) is None
+
+
+# ---------------------------------------------------------------------------
+# Determinism: telemetry observes, never steers (DESIGN.md Section 12).
+# ---------------------------------------------------------------------------
+
+def test_engine_matches_reference_with_tracing_on(tmp_path):
+    layers = _conv_chain()
+    edges = chain_edges(layers)
+    arch = _small_arch()
+    cfg = SearchConfig(n_candidates=8, seed=0, max_steps=512,
+                       mode="transform", refine_passes=1)
+    ref = optimize_network(layers, edges, arch,
+                           SearchConfig(n_candidates=8, seed=0,
+                                        max_steps=512, mode="transform",
+                                        refine_passes=1,
+                                        use_engine=False))
+    obs.enable(trace_path=str(tmp_path / "t.jsonl"), sample_every=2)
+    traced = optimize_network(layers, edges, arch, cfg)
+    obs.disable()
+    untraced = optimize_network(layers, edges, arch, cfg)
+    assert traced.total_ns == ref.total_ns == untraced.total_ns
+    assert [l.latency_ns for l in traced.layers] \
+        == [l.latency_ns for l in ref.layers]
+
+
+def test_sweep_frontier_identical_with_telemetry_toggled(tiny_net,
+                                                         tmp_path):
+    base = run_dse(tiny_dcfg(), space=tiny_space())
+    obs.enable(trace_path=str(tmp_path / "t.jsonl"))
+    traced = run_dse(tiny_dcfg(), space=tiny_space())
+    obs.disable()
+    sampled = obs.enable(sample_every=4)
+    assert sampled.enabled
+    resampled = run_dse(tiny_dcfg(), space=tiny_space())
+    obs.disable()
+    assert traced.frontier.canonical_json() \
+        == base.frontier.canonical_json() \
+        == resampled.frontier.canonical_json()
+    # the traced run actually recorded sweep metrics
+    evs = _read_events(str(tmp_path / "t.jsonl"))
+    assert any(e["name"] == "dse.sweep" for e in evs)
+
+
+def test_distributed_matches_serial_with_telemetry_on(tiny_net,
+                                                      tmp_path):
+    serial = run_dse(tiny_dcfg(), space=tiny_space())
+    obs.enable(trace_path=str(tmp_path / "t.jsonl"))
+    res = run_distributed(
+        tiny_dcfg(), DistribConfig(root=str(tmp_path / "shared"),
+                                   n_workers=2, worker_mode="thread"),
+        space=tiny_space())
+    snap = obs.registry().snapshot()
+    obs.disable()
+    assert res.frontier.canonical_json() == serial.frontier.canonical_json()
+    # the workers' shard metrics were folded into the global registry
+    assert snap["counters"]["fleet.evaluated"] == res.stats["evaluated"]
+    assert res.stats["fleet"]["workers_reported"] == 2
+    assert res.stats["fleet"]["claims"] >= res.stats["fleet"]["batches"]
