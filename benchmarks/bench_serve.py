@@ -14,6 +14,16 @@ across PRs the same way ``BENCH_search.json`` tracks the search path:
   path, two concurrent clients: each request re-proposes its points
   and serves them all from the journal with zero new mapping searches
   (the warm-restart regime).
+* ``http_c4``    — the same traffic over the real HTTP transport
+  (``repro.serve.transport``, loopback socket, four urllib clients):
+  distinct requests answered from the warm journal, repeats from the
+  memo — the delta against the in-process phases is what the wire
+  costs.
+* ``http_storm`` — a burst of distinct cold requests against a server
+  with one sweep worker and a tiny admission cap (``max_pending=2``):
+  some answer 200, the overflow answers 429 immediately — the
+  load-shed regime; the recorded ``shed_rate`` proves admission
+  control engages instead of queueing unboundedly.
 
 Latency percentiles are client-side (submit-to-response, sorted-sample
 p50/p99), so they include queueing — what a caller actually waits.
@@ -32,7 +42,8 @@ from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, List, Tuple
 
 from repro.dse import ParamSpace
-from repro.serve import MappingRequest, MappingService
+from repro.serve import (MappingHTTPServer, MappingRequest,
+                         MappingResponse, MappingService)
 
 from . import record
 from .common import csv_row
@@ -93,6 +104,44 @@ def _drive(svc: MappingService, reqs: List[MappingRequest],
     return out, lat, time.perf_counter() - t0
 
 
+def _http_post(url: str, req: MappingRequest,
+               timeout: float = 300.0) -> Tuple[int, Dict]:
+    """POST one request to a running server; returns (status, body) —
+    non-2xx bodies included, so callers count sheds without raising."""
+    import urllib.error
+    import urllib.request
+    r = urllib.request.Request(
+        url + "/v1/mapping",
+        data=json.dumps(req.to_dict()).encode(),
+        headers={"Content-Type": "application/json"})
+    try:
+        with urllib.request.urlopen(r, timeout=timeout) as resp:
+            return resp.status, json.loads(resp.read())
+    except urllib.error.HTTPError as e:
+        return e.code, json.loads(e.read() or b"{}")
+
+
+def _drive_http(url: str, reqs: List[MappingRequest],
+                concurrency: int) -> Tuple[List[int], List[Dict],
+                                           List[float], float]:
+    """HTTP twin of ``_drive``: fire ``reqs`` at a server from
+    ``concurrency`` urllib clients; returns (status codes, response
+    bodies, client latencies, phase wall)."""
+    codes = [0] * len(reqs)
+    out: List[Dict] = [{} for _ in reqs]
+    lat = [0.0] * len(reqs)
+
+    def one(i: int) -> None:
+        t0 = time.perf_counter()
+        codes[i], out[i] = _http_post(url, reqs[i])
+        lat[i] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    with ThreadPoolExecutor(max_workers=concurrency) as pool:
+        list(pool.map(one, range(len(reqs))))
+    return codes, out, lat, time.perf_counter() - t0
+
+
 def _pct(lat: List[float], q: float) -> float:
     s = sorted(lat)
     return s[min(len(s) - 1, int(q * len(s)))]
@@ -142,6 +191,54 @@ def serve_latency():
             phases["journal_c2"] = _phase(out, lat, wall)
         finally:
             svc2.close()
+        # the same traffic over the real transport: distinct requests
+        # hit the warm journal, repeats the fresh server's memo — the
+        # delta against the in-process phases is the wire cost
+        server = MappingHTTPServer(_service(journal, max_workers=2),
+                                   port=0).start()
+        try:
+            codes, bodies, lat, wall = _drive_http(
+                server.url, reqs + reqs, concurrency=4)
+            assert all(c == 200 for c in codes), codes
+            phases["http_c4"] = _phase(
+                [MappingResponse.from_dict(b) for b in bodies], lat, wall)
+        finally:
+            server.close()
+        # request storm against one sweep worker and a 2-deep admission
+        # queue: overflow answers 429 immediately instead of queueing
+        storm_svc = MappingService(
+            journal_path=os.path.join(root, "storm.jsonl"),
+            max_workers=1, max_pending=2,
+            space_overrides={"dram_pim": _bench_space()})
+        server = MappingHTTPServer(storm_svc, port=0).start()
+        try:
+            storm_reqs = [MappingRequest(
+                network="resnet18", explorer="grid", budget=4, seed=s,
+                n_candidates=3, max_steps=256)
+                for s in range(100, 100 + 2 * N_REQUESTS)]
+            codes, _bodies, lat, wall = _drive_http(
+                server.url, storm_reqs, concurrency=8)
+            n_ok = sum(1 for c in codes if c == 200)
+            n_shed = sum(1 for c in codes if c == 429)
+            assert n_ok + n_shed == len(storm_reqs), codes
+            storm = {
+                "n": len(storm_reqs),
+                "concurrency": 8,
+                "max_workers": 1,
+                "max_pending": 2,
+                "ok": n_ok,
+                "shed": n_shed,
+                "shed_rate": round(n_shed / len(storm_reqs), 4),
+                "wall_s": round(wall, 4),
+                "rps": round(len(storm_reqs) / wall, 2),
+                "p50_ms": round(_pct(lat, 0.50) * 1e3, 3),
+                "p99_ms": round(_pct(lat, 0.99) * 1e3, 3),
+                "shed_p99_ms": round(_pct(
+                    [l for l, c in zip(lat, codes) if c == 429] or [0.0],
+                    0.99) * 1e3, 3),
+            }
+        finally:
+            server.close()
     finally:
         shutil.rmtree(root, ignore_errors=True)
 
@@ -156,6 +253,7 @@ def serve_latency():
                     "space": "dram_pim restricted (4 points)",
                     "distinct_requests": N_REQUESTS},
         "phases": phases,
+        "http_storm": storm,
         "rates": {
             "memo_hit_rate": round(memo_served / total, 4),
             "journal_hit_rate": round(
@@ -179,6 +277,14 @@ def serve_latency():
             "us_per_call": round(p["p50_ms"] * 1e3, 3),
             "derived": derived}})
         yield csv_row(f"bench_serve.{name}", p["p50_ms"] * 1e3, derived)
+    storm_derived = (f"shed_rate={storm['shed_rate']};ok={storm['ok']}"
+                     f";shed={storm['shed']};rps={storm['rps']}"
+                     f";shed_p99_ms={storm['shed_p99_ms']}")
+    record.update_rows({"bench_serve.http_storm": {
+        "us_per_call": round(storm["p50_ms"] * 1e3, 3),
+        "derived": storm_derived}})
+    yield csv_row("bench_serve.http_storm", storm["p50_ms"] * 1e3,
+                  storm_derived)
     yield csv_row("bench_serve.rates", 0.0,
                   f"memo_hit_rate={doc['rates']['memo_hit_rate']}"
                   f";journal_hit_rate={doc['rates']['journal_hit_rate']}"

@@ -46,6 +46,7 @@ MODULES = [
     "repro.serve.engine",
     "repro.serve.jobs",
     "repro.serve.service",
+    "repro.serve.transport",
 ]
 
 

@@ -5,6 +5,7 @@ Entry points::
     python benchmarks/run.py [bench]            # paper-figure CSV suite
     python benchmarks/run.py dse [...]          # architecture DSE sweep
     python benchmarks/run.py serve-dse [...]    # one mapping-service request
+    python benchmarks/run.py serve-http [...]   # the same service over HTTP
     python benchmarks/run.py dse-worker [...]   # join a distributed sweep
     python benchmarks/run.py dse-coordinator [...]  # drive one
     python benchmarks/run.py obs-report [...]   # render saved telemetry
@@ -24,7 +25,12 @@ processes or machines sharing one directory (DESIGN.md Section 10).
 ``serve-dse`` answers one deployment request through the mapping
 service (``repro.serve.MappingService``, DESIGN.md Section 11) — an
 HTTP-less local client whose repeat invocations are served from the
-service journal with zero new mapping searches. Every subcommand takes
+service journal with zero new mapping searches. ``serve-http`` binds
+the same service to a listening socket (``repro.serve.transport``,
+DESIGN.md Section 13): POST /v1/mapping, GET /v1/metrics (Prometheus
+text), GET /v1/healthz — with request coalescing, a shared
+cross-request overlap engine, and 429 load-shed past ``--max-pending``
+waiting requests. Every subcommand takes
 ``--trace-out PATH`` / ``--metrics-out PATH`` (``repro.obs``): spans go
 to a JSONL trace, the end-of-run metrics snapshot to a JSON file that
 ``obs-report`` renders as cache hit rates, latency percentiles and
@@ -528,12 +534,80 @@ def serve_dse_main(argv) -> None:
         print(resp.to_json(indent=2))
 
 
+def serve_http_main(argv) -> None:
+    """Run the mapping service as an HTTP server (``repro.serve.
+    transport``, DESIGN.md Section 13): POST /v1/mapping answers
+    deployment requests with the same wire forms ``serve-dse`` prints,
+    GET /v1/metrics scrapes the ``serve.*``/``engine.*`` counters in
+    Prometheus text format, GET /v1/healthz is liveness. Serves until
+    interrupted; SIGINT drains in-flight sweeps before exiting."""
+    p = argparse.ArgumentParser(
+        prog="run.py serve-http",
+        description="Serve mapping requests over HTTP "
+                    "(repro.serve.MappingHTTPServer).")
+    p.add_argument("--host", default="127.0.0.1")
+    p.add_argument("--port", type=int, default=8099,
+                   help="listening port (0 = ephemeral, printed at "
+                        "startup)")
+    p.add_argument("--journal", default=None,
+                   help="service journal path (default: "
+                        "dse_runs/service.jsonl) — the cross-request "
+                        "result cache")
+    p.add_argument("--max-workers", type=int, default=1, metavar="N",
+                   help="concurrent sweep threads")
+    p.add_argument("--max-pending", type=int, default=32, metavar="N",
+                   help="admission cap: shed (HTTP 429) once N distinct "
+                        "requests are waiting (0 = unbounded)")
+    p.add_argument("--memo-cap", type=int, default=256, metavar="N",
+                   help="LRU size of the response memo (and the "
+                        "loop-nest cache)")
+    p.add_argument("--persist-dir", default=None, metavar="DIR",
+                   help="write-through the memo/nest caches to DIR so "
+                        "a restarted server starts warm")
+    p.add_argument("--compact-every", type=float, default=None,
+                   metavar="S", help="background maintenance cadence: "
+                   "compact the journal and persisted caches every S "
+                   "seconds")
+    p.add_argument("--bundle-cap", type=int, default=8, metavar="N",
+                   help="arch bundles the shared overlap engine "
+                        "retains across requests (LRU)")
+    _obs_flags(p)
+    args = p.parse_args(argv)
+
+    from repro.dse.driver import JOURNAL_ROOT
+    from repro.serve import MappingHTTPServer, MappingService
+    journal = args.journal or os.path.join(JOURNAL_ROOT, "service.jsonl")
+    # telemetry before the service: it binds its registry at construction
+    finish_obs = _setup_obs(args)
+    svc = MappingService(
+        journal_path=journal,
+        max_workers=args.max_workers,
+        max_pending=args.max_pending or None,
+        memo_cap=args.memo_cap, nest_cap=args.memo_cap,
+        persist_dir=args.persist_dir,
+        compact_every_s=args.compact_every,
+        engine_bundle_cap=args.bundle_cap)
+    server = MappingHTTPServer(svc, host=args.host, port=args.port)
+    print(f"serve-http: listening on {server.url} journal={journal} "
+          f"workers={args.max_workers} max_pending={args.max_pending}",
+          flush=True)
+    try:
+        server.serve_forever()
+    except KeyboardInterrupt:
+        print("serve-http: draining...", flush=True)
+    finally:
+        server.close()
+        finish_obs()
+
+
 def main() -> None:
     argv = sys.argv[1:]
     if argv and argv[0] == "dse":
         dse_main(argv[1:])
     elif argv and argv[0] == "serve-dse":
         serve_dse_main(argv[1:])
+    elif argv and argv[0] == "serve-http":
+        serve_http_main(argv[1:])
     elif argv and argv[0] == "dse-worker":
         dse_worker_main(argv[1:])
     elif argv and argv[0] == "dse-coordinator":
@@ -544,8 +618,8 @@ def main() -> None:
         bench_main(argv[1:] if argv else [])
     else:
         print(f"unknown subcommand {argv[0]!r}; use 'bench', 'dse', "
-              "'serve-dse', 'dse-worker', 'dse-coordinator' or "
-              "'obs-report'", file=sys.stderr)
+              "'serve-dse', 'serve-http', 'dse-worker', "
+              "'dse-coordinator' or 'obs-report'", file=sys.stderr)
         sys.exit(2)
 
 

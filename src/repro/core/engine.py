@@ -80,7 +80,7 @@ _STAT_KEYS = ("tiles_hit", "tiles_miss", "tail_hit", "tail_miss",
               "proj_hit", "proj_miss", "ready_hit", "ready_miss",
               "sepcls_hit", "sepcls_miss", "score_hit", "score_miss",
               "score_pool_hit", "batch_scored", "dense_scored",
-              "guard_fallback", "evictions")
+              "guard_fallback", "evictions", "perf_hit", "perf_miss")
 
 
 def _unique_inverse(codes: np.ndarray, bound: int):
@@ -208,11 +208,15 @@ class OverlapEngine:
         if m.arch is self._arch:       # fast path: same spec object
             return
         # never clobber a warm bundle for this key (regression: the
-        # initial/post-evict state once overwrote it with an empty one)
+        # initial/post-evict state once overwrote it with an empty one).
+        # Pop + reinsert keeps ``_bundles`` in last-touched order, which
+        # is what makes ``evict_lru`` an LRU and not merely FIFO — the
+        # dict ops run only on an arch *switch*, never per score.
         key = m.arch.to_key()
-        cur = self._bundles.get(key)
+        cur = self._bundles.pop(key, None)
         if cur is None:
-            cur = self._bundles[key] = _ArchCaches()
+            cur = _ArchCaches()
+        self._bundles[key] = cur
         self._cur = cur
         self._arch = m.arch
 
@@ -241,6 +245,20 @@ class OverlapEngine:
                       remaining=len(self._bundles))
         return bundle is not None
 
+    def evict_lru(self, keep: int) -> int:
+        """Evict least-recently-used arch bundles until at most ``keep``
+        remain; returns how many were dropped. ``_bundles`` is kept in
+        last-touched order by ``_check_arch``, so iteration order *is*
+        recency order. The content-keyed ``PerfCache`` is untouched —
+        this bounds per-arch cache memory, not cross-arch reuse. A
+        long-lived multi-tenant service calls this between requests so
+        repeat arch families stay warm under a fixed memory cap."""
+        n = 0
+        while len(self._bundles) > max(0, keep):
+            self.evict_arch(next(iter(self._bundles)))
+            n += 1
+        return n
+
     def publish_metrics(self, registry=None) -> None:
         """Forward ``stats`` deltas since the last publish into the obs
         registry as ``engine.*`` counters (plus the live bundle-count
@@ -250,6 +268,10 @@ class OverlapEngine:
         reg = registry if registry is not None else obs.registry()
         if reg is None:
             return
+        # fold the PerfCache's plain-int accounting in first, so
+        # ``engine.perf_hit``/``perf_miss`` ride the same delta cursor
+        self.stats["perf_hit"] = self._perf.hits
+        self.stats["perf_miss"] = self._perf.misses
         for k, v in self.stats.items():
             d = v - self._published[k]
             if d:

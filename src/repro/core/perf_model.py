@@ -197,10 +197,18 @@ class PerfCache:
 
     def __init__(self):
         self._store: dict = {}
+        #: plain-int hit/miss accounting (no telemetry dispatch — the
+        #: engine folds these into its ``stats`` at publish time), so
+        #: cross-request cache warming is observable (DESIGN.md §13)
+        self.hits = 0
+        self.misses = 0
 
     def analyze(self, mapping: Mapping) -> LayerPerf:
         key = (mapping.cache_key, mapping.arch.to_key())
         hit = self._store.get(key)
         if hit is None:
+            self.misses += 1
             hit = self._store[key] = analyze(mapping)
+        else:
+            self.hits += 1
         return hit

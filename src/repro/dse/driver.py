@@ -72,6 +72,7 @@ def execute_sweep(cfg: DSEConfig, *,
                   space: Optional[ParamSpace] = None,
                   journal: Optional[RunJournal] = None,
                   deadline_s: Optional[float] = None,
+                  engine=None,
                   distributed: int = 0,
                   shared_dir: Optional[str] = None,
                   batch_size: int = 1,
@@ -80,22 +81,25 @@ def execute_sweep(cfg: DSEConfig, *,
     """Run one sweep — serial or distributed — under one contract.
 
     Serial (``distributed == 0``): ``run_dse`` with an optional
-    wall-clock ``deadline_s`` (best-so-far frontier on expiry).
+    wall-clock ``deadline_s`` (best-so-far frontier on expiry) and an
+    optional caller-owned shared ``OverlapEngine`` (the mapping
+    service's cross-request cache warming).
     Distributed (``distributed == N > 0``): the shared-dir work-stealing
     subsystem with N local worker processes; ``shared_dir`` defaults to
     the sweep's journal path with ``.jsonl`` -> ``.shared``. Deadlines
-    and caller-supplied journals/spaces are serial-only (workers build
-    their own view from the shared directory; spaces do not pickle).
+    and caller-supplied journals/spaces/engines are serial-only (workers
+    build their own view from the shared directory; spaces and engines
+    do not pickle).
     """
     if distributed <= 0:
         return run_dse(cfg, space=space, journal=journal,
-                       deadline_s=deadline_s)
+                       deadline_s=deadline_s, engine=engine)
     if deadline_s is not None:
         raise ValueError("deadline_s is serial-only; a distributed "
                          "sweep runs to completion of its budget")
-    if space is not None or journal is not None:
-        raise ValueError("distributed sweeps derive space and journal "
-                         "from the config/shared dir; pass neither")
+    if space is not None or journal is not None or engine is not None:
+        raise ValueError("distributed sweeps derive space, journal and "
+                         "engines from the config/shared dir; pass none")
     from .distrib import DistribConfig, run_distributed
     root = shared_dir or shared_dir_for(journal_path_for(cfg))
     dist = DistribConfig(root=root, n_workers=distributed,

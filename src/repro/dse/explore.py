@@ -244,14 +244,22 @@ def _pool_eval(payload: Tuple[Dict, Dict]) -> Dict:
 
 
 class _Evaluator:
-    """Journal-aware batch scorer (serial shared engine or process pool)."""
+    """Journal-aware batch scorer (serial shared engine or process pool).
+
+    ``engine`` may be caller-supplied (the mapping service shares ONE
+    engine across requests so repeat arch families resume warm caches);
+    then bundle *retention* is the caller's policy — the per-point
+    ``evict_arch`` that bounds a one-shot sweep's memory is skipped, and
+    the caller trims with ``OverlapEngine.evict_lru`` between sweeps."""
 
     def __init__(self, space: ParamSpace, dcfg: DSEConfig,
-                 journal: RunJournal):
+                 journal: RunJournal,
+                 engine: Optional[OverlapEngine] = None):
         self.space = space
         self.dcfg = dcfg
         self.journal = journal
-        self.engine = OverlapEngine()
+        self.engine = engine if engine is not None else OverlapEngine()
+        self._evict_after_score = engine is None
         self.n_evaluated = 0
         self.n_from_journal = 0
         self._pool = None
@@ -290,8 +298,9 @@ class _Evaluator:
                                                    engine=self.engine))
                         # scored once per sweep: evict to bound memory
                         # while the engine's PerfCache keeps cross-arch
-                        # reuse
-                        self.engine.evict_arch(a)
+                        # reuse (shared engines retain — caller's policy)
+                        if self._evict_after_score:
+                            self.engine.evict_arch(a)
             for i, a, f in zip(misses, archs, fields):
                 rec = _make_record(points[i], self.dcfg, a, f)
                 out[i] = self.journal.record(keys[i], rec)
@@ -483,11 +492,18 @@ def proposal_stream(space: ParamSpace, dcfg: DSEConfig) -> ProposalStream:
 
 def run_dse(dcfg: DSEConfig, space: Optional[ParamSpace] = None,
             journal: Optional[RunJournal] = None,
-            deadline_s: Optional[float] = None) -> DSEResult:
+            deadline_s: Optional[float] = None,
+            engine: Optional[OverlapEngine] = None) -> DSEResult:
     """Run one sweep; returns records, the Pareto frontier and stats.
 
     The space default point is always proposed first, so every result
     carries a baseline for iso-area comparisons.
+
+    ``engine`` shares a caller-owned ``OverlapEngine`` across sweeps
+    (bundle retention is then the caller's policy — see ``_Evaluator``);
+    results are bit-identical either way, since every cache is
+    content-keyed. Serial-only (``workers == 0``): the process pool
+    keeps its per-worker engines.
 
     ``deadline_s`` bounds the sweep's wall clock: scoring switches to
     point-at-a-time and stops once the deadline passes, returning the
@@ -500,7 +516,7 @@ def run_dse(dcfg: DSEConfig, space: Optional[ParamSpace] = None,
     space = space or get_space(dcfg.family)
     journal = journal if journal is not None \
         else RunJournal(dcfg.journal_path)
-    ev = _Evaluator(space, dcfg, journal)
+    ev = _Evaluator(space, dcfg, journal, engine=engine)
     frontier = ParetoFrontier()
     records: List[Dict] = []
     t0 = time.perf_counter()

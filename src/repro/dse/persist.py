@@ -36,6 +36,7 @@ from __future__ import annotations
 import hashlib
 import json
 import os
+import threading
 import time
 import uuid
 from typing import Dict, Iterator, List, Optional, Tuple
@@ -300,7 +301,14 @@ class RunJournal:
     explicit ``backend``, or neither (in-memory only — tests, throwaway
     sweeps). ``refresh()`` re-merges records other writers have
     published since load; ``publish()`` exposes this writer's staged
-    records to them (both no-ops where the backend needs none)."""
+    records to them (both no-ops where the backend needs none).
+
+    Thread-safe: every mutating or reading method serializes on one
+    internal ``RLock``, so a journal shared across service job threads
+    (``repro.serve``) never interleaves ``record``/``publish``/
+    ``compact`` mid-write. Records are content-keyed and deterministic,
+    so lock ordering can never change *what* is stored — only that each
+    store happens whole."""
 
     def __init__(self, path: Optional[str] = None,
                  backend: Optional[JournalBackend] = None):
@@ -310,27 +318,33 @@ class RunJournal:
             backend = FileBackend(path)
         self.backend = backend
         self.path = getattr(backend, "path", None)
+        self._lock = threading.RLock()
         self._records: Dict[str, Dict] = backend.load() if backend else {}
 
     def __len__(self) -> int:
-        return len(self._records)
+        with self._lock:
+            return len(self._records)
 
     def __contains__(self, key: str) -> bool:
-        return key in self._records
+        with self._lock:
+            return key in self._records
 
     def __iter__(self) -> Iterator[Dict]:
-        return iter(self._records.values())
+        with self._lock:
+            return iter(list(self._records.values()))
 
     def get(self, key: str) -> Optional[Dict]:
         """The record stored under a content key, or None."""
-        return self._records.get(key)
+        with self._lock:
+            return self._records.get(key)
 
     def record(self, key: str, rec: Dict) -> Dict:
         """Store (and stage to the backend, if any) one record."""
         rec = {"key": key, **{k: v for k, v in rec.items() if k != "key"}}
-        self._records[key] = rec
-        if self.backend is not None:
-            self.backend.append(rec)
+        with self._lock:
+            self._records[key] = rec
+            if self.backend is not None:
+                self.backend.append(rec)
         obs.inc("journal.records")
         return rec
 
@@ -338,7 +352,8 @@ class RunJournal:
         """Make records staged by ``record`` visible to other readers."""
         if self.backend is not None:
             t0 = time.perf_counter()
-            self.backend.publish()
+            with self._lock:
+                self.backend.publish()
             obs.observe("journal.publish_seconds",
                         time.perf_counter() - t0)
 
@@ -349,12 +364,13 @@ class RunJournal:
         if self.backend is None:
             return 0
         t0 = time.perf_counter()
-        fresh = self.backend.load_new()
-        n_new = 0
-        for k, rec in fresh.items():
-            if k not in self._records:
-                n_new += 1
-            self._records[k] = rec
+        with self._lock:
+            fresh = self.backend.load_new()
+            n_new = 0
+            for k, rec in fresh.items():
+                if k not in self._records:
+                    n_new += 1
+                self._records[k] = rec
         obs.observe("journal.refresh_seconds", time.perf_counter() - t0)
         obs.inc("journal.refresh_new", n_new)
         return n_new
@@ -367,9 +383,10 @@ class RunJournal:
         made but had not yet made visible (shared-dir backends stage;
         file backends publish as a no-op). In-memory journals have
         nothing to compact."""
-        if self.backend is None:
-            return (len(self._records), len(self._records))
-        self.backend.publish()
-        out = self.backend.compact()
-        self._records = self.backend.load()
-        return out
+        with self._lock:
+            if self.backend is None:
+                return (len(self._records), len(self._records))
+            self.backend.publish()
+            out = self.backend.compact()
+            self._records = self.backend.load()
+            return out

@@ -49,7 +49,8 @@ def render_report(snap: Dict) -> str:
     eng = {k: v for k, v in c.items() if k.startswith("engine.")}
     if eng:
         sec("engine")
-        for memo in ("tiles", "tail", "proj", "ready", "sepcls", "score"):
+        for memo in ("tiles", "tail", "proj", "ready", "sepcls", "score",
+                     "perf"):
             hit = eng.get(f"engine.{memo}_hit", 0)
             miss = eng.get(f"engine.{memo}_miss", 0)
             if hit or miss:
@@ -112,14 +113,20 @@ def render_report(snap: Dict) -> str:
         sec("serve")
         lines.append(f"  requests           "
                      f"{int(c.get('serve.requests', 0))}")
-        for src in ("memo", "journal", "search"):
+        for src in ("memo", "journal", "search", "coalesced"):
             k = f"serve.served_from.{src}"
             if k in c:
                 lines.append(f"  served from {src:<7}{int(c[k])}")
         lines.append(f"  coalesced          "
                      f"{int(c.get('serve.coalesced', 0))}")
+        shed = int(c.get("serve.shed", 0))
+        if shed:
+            lines.append(f"  shed (429)         {shed}")
         lines.append(f"  sweeps run         "
                      f"{int(c.get('serve.sweeps', 0))}")
+        compactions = int(c.get("serve.compactions", 0))
+        if compactions:
+            lines.append(f"  compactions        {compactions}")
         h = _hist_line(snap, "serve.request_seconds")
         if h:
             lines.append(f"  request latency    {h}")

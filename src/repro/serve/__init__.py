@@ -5,12 +5,17 @@ the batched LM inference engine (prefill + decode with a fixed-size KV
 cache). ``MappingService`` (``serve.service``) is the deployment-time
 DSE service: a ``MappingRequest`` ("this network, this budget") in, the
 best (arch, mapping) pair and its Pareto frontier out — backed by the
-content-keyed run journal as a cross-request cache and a coalescing
-job queue (``serve.jobs``). See DESIGN.md Section 11.
+content-keyed run journal as a cross-request cache, a shared
+cross-request ``OverlapEngine``, and a staged coalescing job queue
+with admission control (``serve.jobs``). ``MappingHTTPServer``
+(``serve.transport``) exposes the same wire forms over HTTP. See
+DESIGN.md Sections 11 and 13.
 """
 from .engine import Engine, ServeConfig
-from .jobs import Job, JobQueue
+from .jobs import Job, JobQueue, QueueFull, QueueShutdown
 from .service import MappingRequest, MappingResponse, MappingService
+from .transport import MappingHTTPServer
 
-__all__ = ["Engine", "ServeConfig", "Job", "JobQueue", "MappingRequest",
-           "MappingResponse", "MappingService"]
+__all__ = ["Engine", "ServeConfig", "Job", "JobQueue", "QueueFull",
+           "QueueShutdown", "MappingRequest", "MappingResponse",
+           "MappingService", "MappingHTTPServer"]

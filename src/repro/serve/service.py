@@ -3,19 +3,22 @@
 The paper's pitch is that overlap-driven search is fast enough to use
 *on demand*; NicePIM/PIMSYN frame the same capability as a
 deployment-time service — "best PIM config for this network under this
-budget". ``MappingService`` is that service, HTTP-less by design: a
-``MappingRequest`` (network, arch family, objective, optional area
-budget and wall-clock deadline) in, a ``MappingResponse`` (the best
-(arch, mapping) pair plus the full latency/energy/area Pareto
-frontier) out. Transport is someone else's problem — both dataclasses
-round-trip through plain dicts/JSON, and ``benchmarks/run.py
-serve-dse`` is the local client. See DESIGN.md Section 11.
+budget". ``MappingService`` is that service: a ``MappingRequest``
+(network, arch family, objective, optional area budget and wall-clock
+deadline) in, a ``MappingResponse`` (the best (arch, mapping) pair plus
+the full latency/energy/area Pareto frontier) out. Both dataclasses
+round-trip through plain dicts/JSON; ``benchmarks/run.py serve-dse`` is
+the in-process client and ``repro.serve.transport`` puts the same wire
+forms behind HTTP (``run.py serve-http``). See DESIGN.md Sections 11
+and 13.
 
 Three layers make repeat traffic cheap:
 
 * **Response memo** — an exact repeat of a completed request (same
   ``cache_key``) returns the stored ``MappingResponse`` without
-  touching the queue.
+  touching the queue. The memo (and the materialized loop-nest cache)
+  is LRU-bounded and optionally persisted to ``persist_dir`` so a
+  restarted server answers yesterday's traffic without re-sweeping.
 * **Run journal** — all sweeps share one content-keyed ``RunJournal``
   (keys embed network/mode/strategy/seed/search budget/arch, so
   heterogeneous requests coexist in one store). A warm request — after
@@ -26,12 +29,25 @@ Three layers make repeat traffic cheap:
 * **Request coalescing** — concurrent identical requests attach to one
   in-flight job (``repro.serve.jobs``) and share a single sweep.
 
+Below the caches, serial sweeps share one long-lived ``OverlapEngine``
+(LRU-capped at ``engine_bundle_cap`` arch bundles), so *different*
+requests in the same arch family warm each other's ``PerfCache`` and
+overlap tables across requests — the cross-request analogue of the
+paper's within-search reuse.
+
+Admission control (``max_pending``): once that many distinct requests
+are waiting for a worker, further non-coalescing submissions are shed
+with ``QueueFull`` (HTTP 429 at the transport) and counted under
+``serve.shed`` — bounded queues with explicit load-shed, per the
+MLPerf offline-serving discipline, instead of an unbounded backlog.
+
 Determinism: sweeps are seed-deterministic and journal records are
 content-keyed, so the same request always yields a byte-identical
 ``frontier_json`` (the ``ParetoFrontier.canonical_json`` artifact) —
-whether scored fresh, replayed from the journal, or coalesced.
-Deadline requests truncate a deterministic evaluation order, so their
-frontiers converge to the full-budget answer as the journal warms.
+whether scored fresh, replayed from the journal, memoized, or
+coalesced. Deadline requests truncate a deterministic evaluation
+order, so their frontiers converge to the full-budget answer as the
+journal warms; deadline-truncated responses are never memoized.
 """
 from __future__ import annotations
 
@@ -41,16 +57,19 @@ import json
 import os
 import threading
 import time
-from typing import Dict, List, Optional
+from collections import OrderedDict
+from typing import Any, Dict, List, Optional, Tuple
 
 from .. import obs
 from ..obs import Registry
+from ..core.engine import OverlapEngine
+from ..core.search import combine_objective
 from ..dse.driver import (JOURNAL_ROOT, execute_sweep, frontier_points,
                           sweep_summary)
 from ..dse.explore import DSEConfig, DSEResult
 from ..dse.persist import RunJournal
 from ..dse.space import ParamSpace, get_space
-from .jobs import Job, JobQueue
+from .jobs import Job, JobQueue, QueueFull
 
 
 @dataclasses.dataclass(frozen=True)
@@ -136,7 +155,12 @@ class MappingResponse:
     determinism artifact); ``served_from`` records how the answer was
     produced (``search`` / ``journal`` / ``memo``); ``summary`` is the
     ``sweep_summary`` dict minus ``frontier_points``, which is carried
-    once, top-level."""
+    once, top-level.
+
+    Provenance counts the work done for *this* answer: a memo replay
+    reports ``evaluated=0``, ``from_journal=0`` and ``wall_s=0.0`` —
+    the replay cost nothing — while the frontier/winner payload stays
+    byte-identical to the originating response."""
 
     request_key: str
     status: str                       # "ok" | "infeasible"
@@ -164,25 +188,83 @@ class MappingResponse:
         """JSON wire form of ``to_dict``."""
         return json.dumps(self.to_dict(), sort_keys=True, indent=indent)
 
+    @classmethod
+    def from_dict(cls, d: Dict) -> "MappingResponse":
+        """Inverse of ``to_dict`` — HTTP clients and the persisted-memo
+        reload path; unknown keys are an error so schema drift between
+        a persisted memo and the running code surfaces loudly."""
+        fields = {f.name for f in dataclasses.fields(cls)}
+        unknown = sorted(set(d) - fields)
+        if unknown:
+            raise ValueError(f"unknown response fields: {unknown}")
+        return cls(**d)
+
+
+class _LRU:
+    """Tiny bounded least-recently-used map (``get`` refreshes recency,
+    ``put`` evicts the oldest entries past ``cap``). Not itself locked —
+    the service touches it only under its own ``_lock``."""
+
+    def __init__(self, cap: int):
+        self.cap = max(1, int(cap))
+        self._d: "OrderedDict[str, Any]" = OrderedDict()
+
+    def get(self, key: str, default=None):
+        """Value for ``key`` (refreshing its recency) or ``default``."""
+        if key not in self._d:
+            return default
+        self._d.move_to_end(key)
+        return self._d[key]
+
+    def put(self, key: str, value) -> None:
+        """Insert/overwrite ``key``, evicting the LRU tail past cap."""
+        self._d[key] = value
+        self._d.move_to_end(key)
+        while len(self._d) > self.cap:
+            self._d.popitem(last=False)
+
+    def items(self) -> List[Tuple[str, Any]]:
+        """Snapshot of (key, value) pairs, oldest first."""
+        return list(self._d.items())
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._d
+
 
 class MappingService:
     """Request/response engine over the DSE stack (module docstring).
 
     One instance owns one ``RunJournal`` (``journal_path``; in-memory
-    when None — tests, throwaway services), a response memo, and a
-    ``JobQueue`` of ``max_workers`` sweep threads. ``space_overrides``
-    maps family names to caller-built ``ParamSpace``s (restricted
-    search spaces, tests); families not overridden resolve through
-    ``repro.dse.space.get_space``. ``shared_root`` hosts the per-request
-    shared directories of ``distributed`` requests (each request key
-    gets its own, so concurrent distributed sweeps never share a STOP
-    file, while identical re-requests reuse their shards)."""
+    when None — tests, throwaway services), an LRU response memo
+    (``memo_cap``) and loop-nest cache (``nest_cap``), a shared serial
+    ``OverlapEngine`` capped at ``engine_bundle_cap`` arch bundles, and
+    a staged ``JobQueue`` of ``max_workers`` sweep threads admitting at
+    most ``max_pending`` waiting requests (None = unbounded; beyond it
+    ``submit`` raises ``QueueFull``). ``space_overrides`` maps family
+    names to caller-built ``ParamSpace``s (restricted search spaces,
+    tests); families not overridden resolve through
+    ``repro.dse.space.get_space``. ``shared_root`` hosts the
+    per-request shared directories of ``distributed`` requests (each
+    request key gets its own, so concurrent distributed sweeps never
+    share a STOP file, while identical re-requests reuse their shards).
+    ``persist_dir`` write-throughs the memo and nest caches to JSONL so
+    a restart starts warm; ``compact_every_s`` runs ``compact()`` (the
+    journal and both persisted caches) on a background cadence."""
 
     def __init__(self, journal_path: Optional[str] = None,
                  journal: Optional[RunJournal] = None,
                  max_workers: int = 1,
                  space_overrides: Optional[Dict[str, ParamSpace]] = None,
-                 shared_root: Optional[str] = None):
+                 shared_root: Optional[str] = None,
+                 max_pending: Optional[int] = None,
+                 memo_cap: int = 256,
+                 nest_cap: int = 256,
+                 persist_dir: Optional[str] = None,
+                 compact_every_s: Optional[float] = None,
+                 engine_bundle_cap: int = 8):
         assert journal_path is None or journal is None, \
             "pass a journal_path or a journal, not both"
         self.journal = journal if journal is not None \
@@ -190,42 +272,73 @@ class MappingService:
         self.shared_root = shared_root or os.path.join(
             JOURNAL_ROOT, "service_shared")
         self._spaces = dict(space_overrides or {})
-        self._memo: Dict[str, MappingResponse] = {}
+        self._memo: _LRU = _LRU(memo_cap)
         # materialized loop nests, keyed by the winning record's journal
         # content key — deterministic, so one search serves every
         # request (deadline repeats, warm restarts) that picks the same
         # (network, search config, arch) winner
-        self._mappings: Dict[str, List[Dict]] = {}
+        self._mappings: _LRU = _LRU(nest_cap)
+        self._persist_dir = persist_dir
         # service metrics live in the process-global registry when
         # telemetry is enabled at construction time, else in a private
         # one — either way the ``stats`` property always counts
         self._reg: Registry = obs.registry() or Registry()
-        self._queue = JobQueue(
-            max_workers=max_workers,
-            depth_gauge=self._reg.gauge("serve.queue.depth"))
+        # _lock guards every piece of cross-request mutable state the
+        # worker threads share: the memo, the nest cache, the journal's
+        # compound check-then-record in _absorb, and the persist files
         self._lock = threading.Lock()
+        # the shared serial-sweep engine is NOT thread-safe; sweeps and
+        # nest materialization take _engine_lock for their whole run
+        # (scoring is GIL-bound, so serializing it costs little and the
+        # cross-request PerfCache warming is worth far more)
+        self._engine = OverlapEngine()
+        self._engine_lock = threading.Lock()
+        self.engine_bundle_cap = engine_bundle_cap
+        self._load_persisted()
+        self._queue = JobQueue(
+            max_workers=max_workers, max_pending=max_pending,
+            depth_gauge=self._reg.gauge("serve.queue.depth"))
+        self.compact_every_s = compact_every_s
+        self._stop = threading.Event()
+        self._compactor: Optional[threading.Thread] = None
+        if compact_every_s is not None and compact_every_s > 0:
+            self._compactor = threading.Thread(
+                target=self._compact_loop, daemon=True,
+                name="mapping-compact")
+            self._compactor.start()
 
     @property
     def stats(self) -> Dict[str, int]:
         """Legacy counter view (requests / memo_hits / coalesced /
-        sweeps) backed by the ``serve.*`` registry counters."""
+        sweeps / shed) backed by the ``serve.*`` registry counters."""
         c = self._reg.counter
         return {"requests": int(c("serve.requests").value),
                 "memo_hits": int(c("serve.memo_hits").value),
                 "coalesced": int(c("serve.coalesced").value),
-                "sweeps": int(c("serve.sweeps").value)}
+                "sweeps": int(c("serve.sweeps").value),
+                "shed": int(c("serve.shed").value)}
 
     def metrics_snapshot(self) -> Dict:
         """Full snapshot of the service's metrics registry (counters,
         queue-depth gauge, request-latency histogram)."""
         return self._reg.snapshot()
 
+    @property
+    def registry(self) -> Registry:
+        """The registry this service counts into (the process-global
+        one when telemetry was enabled at construction, else private);
+        ``GET /v1/metrics`` renders a snapshot of it."""
+        return self._reg
+
     # -- client surface -----------------------------------------------------
 
     def submit(self, req: MappingRequest) -> Job:
         """Enqueue a request; returns immediately with a ``Job`` whose
         ``result()`` is the ``MappingResponse``. Memoized requests get
-        a pre-completed job; identical in-flight requests coalesce."""
+        a pre-completed job; identical in-flight requests coalesce
+        (exempt from admission control). Raises ``QueueFull`` — after
+        counting the arrival under ``serve.shed`` — when ``max_pending``
+        distinct requests are already waiting."""
         key = req.cache_key()
         t0 = time.perf_counter()
         self._reg.counter("serve.requests").inc()
@@ -236,12 +349,26 @@ class MappingService:
             self._reg.counter("serve.served_from.memo").inc()
             self._reg.histogram("serve.request_seconds").observe(
                 time.perf_counter() - t0)
+            # provenance counts work done for THIS answer: a replay
+            # evaluated nothing and took no wall clock
             return Job.completed(key, dataclasses.replace(
-                memo, served_from="memo"))
-        job, coalesced = self._queue.submit(
-            key, lambda: self._run(req, key, t0))
+                memo, served_from="memo", evaluated=0, from_journal=0,
+                wall_s=0.0))
+        try:
+            job, coalesced = self._queue.submit(
+                key, lambda: self._run(req, key, t0))
+        except QueueFull:
+            self._reg.counter("serve.shed").inc()
+            raise
         if coalesced:
             self._reg.counter("serve.coalesced").inc()
+            self._reg.counter("serve.served_from.coalesced").inc()
+            # the originating submission's t0 flows through _run; this
+            # attachment records its own wait so coalesced waiters are
+            # visible in the latency histogram too
+            job.add_done_callback(lambda _job: self._reg.histogram(
+                "serve.request_seconds").observe(
+                    time.perf_counter() - t0))
         return job
 
     def request(self, req: MappingRequest,
@@ -249,9 +376,33 @@ class MappingService:
         """Blocking convenience: ``submit(req).result(timeout)``."""
         return self.submit(req).result(timeout)
 
+    def compact(self) -> None:
+        """One maintenance pass: compact the journal's backing store
+        and rewrite the persisted memo/nest files to their live LRU
+        contents (dropping evicted and superseded lines). Safe to call
+        concurrently with serving; counted under ``serve.compactions``."""
+        self.journal.compact()
+        with self._lock:
+            if self._persist_dir is not None:
+                self._rewrite_jsonl(
+                    self._memo_path(),
+                    [{"key": k, "resp": r.to_dict()}
+                     for k, r in self._memo.items()])
+                self._rewrite_jsonl(
+                    self._nests_path(),
+                    [{"key": k, "mapping": m}
+                     for k, m in self._mappings.items()])
+        self._reg.counter("serve.compactions").inc()
+
     def close(self) -> None:
-        """Drain in-flight sweeps and stop the worker threads."""
+        """Drain in-flight sweeps, stop the worker and maintenance
+        threads, and publish the engine's final counter deltas."""
+        self._stop.set()
+        if self._compactor is not None:
+            self._compactor.join()
+            self._compactor = None
         self._queue.shutdown(wait=True)
+        self._engine.publish_metrics(self._reg)
 
     # -- internals ----------------------------------------------------------
 
@@ -273,9 +424,18 @@ class MappingService:
                     shared_dir=os.path.join(self.shared_root, key[:16]))
                 self._absorb(res)
             else:
-                res = execute_sweep(cfg, space=self._space(req.family),
-                                    journal=self.journal,
-                                    deadline_s=req.deadline_s)
+                # the shared engine retains this family's arch bundles
+                # (and the content-keyed PerfCache), so the next
+                # same-family request starts warm; the LRU cap keeps a
+                # many-tenant server's memory bounded
+                with self._engine_lock:
+                    res = execute_sweep(
+                        cfg, space=self._space(req.family),
+                        journal=self.journal,
+                        deadline_s=req.deadline_s,
+                        engine=self._engine)
+                    self._engine.evict_lru(self.engine_bundle_cap)
+                self._engine.publish_metrics(self._reg)
             resp = self._respond(req, key, res)
         # deadline-truncated answers are NOT memoized: a repeat must
         # re-run (replaying the journal prefix near-free) so repeated
@@ -283,7 +443,9 @@ class MappingService:
         # full-budget frontier instead of freezing at the first cut
         if not resp.deadline_hit:
             with self._lock:
-                self._memo[key] = resp
+                self._memo.put(key, resp)
+                self._append_jsonl(self._memo_path(),
+                                   {"key": key, "resp": resp.to_dict()})
         self._reg.counter("serve.served_from." + resp.served_from).inc()
         if t0 is not None:
             self._reg.histogram("serve.request_seconds").observe(
@@ -294,21 +456,30 @@ class MappingService:
         """Merge a distributed sweep's records into the service journal
         so later serial requests reuse them (records carry their
         content key; re-absorbing an existing key is skipped to keep
-        the journal file from accreting duplicates)."""
-        for rec in res.records:
-            if rec["key"] not in self.journal:
-                self.journal.record(rec["key"], rec)
-        self.journal.publish()
+        the journal file from accreting duplicates). Runs under the
+        service lock: the contains-then-record pair must be atomic
+        against other workers absorbing overlapping result sets."""
+        with self._lock:
+            for rec in res.records:
+                if rec["key"] not in self.journal:
+                    self.journal.record(rec["key"], rec)
+            self.journal.publish()
 
     def _best(self, req: MappingRequest, res: DSEResult) -> Optional[Dict]:
         """The winning record: lowest search-objective value, restricted
-        to the area budget when one is given (None if nothing fits)."""
+        to the area budget when one is given (None if nothing fits).
+        The objective is recomputed from each record's latency/energy —
+        never read from a stored ``objective_value`` — so records
+        journaled under an older schema (or a different objective) rank
+        correctly for THIS request's objective."""
         eligible = res.records
         if req.area_budget_mm2 is not None:
             eligible = [r for r in eligible
                         if r["area_mm2"] <= req.area_budget_mm2 + 1e-12]
         return min(eligible,
-                   key=lambda r: r.get("objective_value", r["total_ns"]),
+                   key=lambda r: combine_objective(
+                       req.objective, r["total_ns"], r["energy_pj"],
+                       req.blend_alpha),
                    default=None)
 
     def _respond(self, req: MappingRequest, key: str,
@@ -316,10 +487,18 @@ class MappingService:
         best = self._best(req, res)
         mapping = None
         if req.include_mapping and best is not None:
-            mapping = self._mappings.get(best["key"])
+            with self._lock:
+                mapping = self._mappings.get(best["key"])
             if mapping is None:
+                # materialization runs unlocked (it is a real mapping
+                # search); a racing worker may do the same search, but
+                # both produce the identical deterministic nest
                 mapping = self._materialize_mapping(req, best)
-                self._mappings[best["key"]] = mapping
+                with self._lock:
+                    self._mappings.put(best["key"], mapping)
+                    self._append_jsonl(self._nests_path(),
+                                       {"key": best["key"],
+                                        "mapping": mapping})
         # the frontier is carried once, top-level; the summary keeps
         # every other sweep_summary column (the BENCH-compatible shape)
         summary = dict(sweep_summary(res))
@@ -347,15 +526,20 @@ class MappingService:
         """Re-derive the winner's per-layer loop nests. Deterministic —
         the same search that scored the record — so the nests *are* the
         scored mapping; costs one extra mapping search on a cold
-        request (the memo answers repeats)."""
+        request (the memo answers repeats). Runs on the shared engine:
+        the sweep that just crowned this winner left its arch bundle
+        and perf entries warm."""
         from ..core.engine import optimize_network_engine
         from ..core.interface import describe
         space = self._space(req.family)
         arch = space.build(space.point(**best["point"]))
         desc = describe(req.network)
         cfg = req.dse_config()
-        net = optimize_network_engine(desc.layers, desc.edges, arch,
-                                      cfg.search_config())
+        with self._engine_lock:
+            net = optimize_network_engine(desc.layers, desc.edges, arch,
+                                          cfg.search_config(),
+                                          engine=self._engine)
+            self._engine.evict_lru(self.engine_bundle_cap)
         return [
             {"layer": getattr(lr.mapping.layer, "name", f"layer{i}"),
              "nest": lr.mapping.pretty(),
@@ -364,3 +548,66 @@ class MappingService:
              "transformed": bool(lr.transformed),
              "moved_frac": float(lr.moved_frac)}
             for i, lr in enumerate(net.layers)]
+
+    # -- persistence --------------------------------------------------------
+
+    def _memo_path(self) -> Optional[str]:
+        return None if self._persist_dir is None \
+            else os.path.join(self._persist_dir, "memo.jsonl")
+
+    def _nests_path(self) -> Optional[str]:
+        return None if self._persist_dir is None \
+            else os.path.join(self._persist_dir, "nests.jsonl")
+
+    def _append_jsonl(self, path: Optional[str], entry: Dict) -> None:
+        """Write-through one cache entry (no-op without persist_dir).
+        Callers hold ``_lock``, so appends never interleave."""
+        if path is None:
+            return
+        with open(path, "a", encoding="utf-8") as fh:
+            fh.write(json.dumps(entry, sort_keys=True,
+                                separators=(",", ":")) + "\n")
+
+    @staticmethod
+    def _rewrite_jsonl(path: Optional[str], entries: List[Dict]) -> None:
+        """Atomically replace a persist file with the live entries."""
+        if path is None:
+            return
+        tmp = path + ".tmp"
+        with open(tmp, "w", encoding="utf-8") as fh:
+            for entry in entries:
+                fh.write(json.dumps(entry, sort_keys=True,
+                                    separators=(",", ":")) + "\n")
+        os.replace(tmp, path)
+
+    def _load_persisted(self) -> None:
+        """Reload the memo and nest caches from ``persist_dir`` (append
+        order = recency order, later lines win, so replaying into the
+        LRU keeps exactly the ``cap`` most recent entries)."""
+        if self._persist_dir is None:
+            return
+        os.makedirs(self._persist_dir, exist_ok=True)
+        for path, lru, decode in (
+                (self._memo_path(), self._memo,
+                 lambda e: MappingResponse.from_dict(e["resp"])),
+                (self._nests_path(), self._mappings,
+                 lambda e: e["mapping"])):
+            if not os.path.exists(path):
+                continue
+            with open(path, "r", encoding="utf-8") as fh:
+                for line in fh:
+                    line = line.strip()
+                    if not line:
+                        continue
+                    try:
+                        entry = json.loads(line)
+                        lru.put(entry["key"], decode(entry))
+                    except (ValueError, KeyError, TypeError):
+                        # a torn tail (crash mid-append) or a
+                        # stale-schema line loses one cache entry, not
+                        # the server start; compact() rewrites it away
+                        continue
+
+    def _compact_loop(self) -> None:
+        while not self._stop.wait(self.compact_every_s):
+            self.compact()

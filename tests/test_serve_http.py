@@ -1,0 +1,127 @@
+"""HTTP transport tests: one wire schema, determinism over the socket,
+and the 400/404/429 error surface.
+
+Each test binds a real ``MappingHTTPServer`` on an ephemeral loopback
+port and drives it with ``urllib`` — the same stack the CI smoke leg
+and ``bench_serve``'s HTTP phases use — over the restricted space of
+``test_serve_service.py`` so everything stays in the fast core loop.
+"""
+import json
+import threading
+import urllib.error
+import urllib.request
+
+import pytest
+
+from repro.serve import MappingHTTPServer, MappingResponse
+
+from test_serve_service import make_service, tiny_request
+
+
+def _post(url, body, timeout=60.0):
+    data = body if isinstance(body, bytes) else json.dumps(body).encode()
+    r = urllib.request.Request(
+        url + "/v1/mapping", data=data,
+        headers={"Content-Type": "application/json"})
+    with urllib.request.urlopen(r, timeout=timeout) as resp:
+        return resp.status, json.loads(resp.read())
+
+
+def _get(url, path, timeout=10.0):
+    with urllib.request.urlopen(url + path, timeout=timeout) as resp:
+        return resp.status, resp.read()
+
+
+@pytest.fixture()
+def server():
+    srv = MappingHTTPServer(make_service(), port=0).start()
+    yield srv
+    srv.close()
+
+
+def test_post_mapping_roundtrip(server):
+    req = tiny_request()
+    code, body = _post(server.url, req.to_dict())
+    assert code == 200
+    resp = MappingResponse.from_dict(body)
+    assert resp.status == "ok"
+    assert resp.request_key == req.cache_key()
+    assert resp.served_from == "search"
+    assert resp.evaluated > 0
+    assert resp.best is not None
+    # the wire response is the service's canonical serialization
+    assert body == json.loads(resp.to_json())
+
+
+def test_repeat_request_is_memo_with_byte_identical_frontier(server):
+    req = tiny_request().to_dict()
+    _, first = _post(server.url, req)
+    _, second = _post(server.url, req)
+    assert second["served_from"] == "memo"
+    # provenance counts the work done for THIS answer: none
+    assert second["evaluated"] == 0
+    assert second["from_journal"] == 0
+    assert second["wall_s"] == 0.0
+    # the payload itself is byte-identical — THE determinism artifact
+    assert second["frontier_json"].encode() \
+        == first["frontier_json"].encode()
+    assert second["best"] == first["best"]
+    assert second["frontier_points"] == first["frontier_points"]
+
+
+def test_bad_json_and_bad_fields_are_400(server):
+    with pytest.raises(urllib.error.HTTPError) as ei:
+        _post(server.url, b"{not json")
+    assert ei.value.code == 400
+    with pytest.raises(urllib.error.HTTPError) as ei:
+        _post(server.url, {"network": "resnet18", "objectiv": "edp"})
+    assert ei.value.code == 400
+    assert "objectiv" in json.loads(ei.value.read())["error"]
+
+
+def test_unknown_routes_are_404(server):
+    with pytest.raises(urllib.error.HTTPError) as ei:
+        _get(server.url, "/v1/nope")
+    assert ei.value.code == 404
+    r = urllib.request.Request(      # POST to a GET-only route
+        server.url + "/v1/healthz", data=b"{}",
+        headers={"Content-Type": "application/json"})
+    with pytest.raises(urllib.error.HTTPError) as ei:
+        urllib.request.urlopen(r, timeout=10.0)
+    assert ei.value.code == 404
+
+
+def test_healthz_and_metrics(server):
+    code, body = _get(server.url, "/v1/healthz")
+    assert code == 200
+    health = json.loads(body)
+    assert health["status"] == "ok"
+    _post(server.url, tiny_request().to_dict())
+    code, text = _get(server.url, "/v1/metrics")
+    assert code == 200
+    text = text.decode()
+    # Prometheus text exposition of the serve counters
+    assert "repro_serve_requests_total 1" in text
+    assert "repro_serve_served_from_search_total 1" in text
+    assert "# TYPE repro_serve_requests_total counter" in text
+
+
+def test_shed_is_429_with_retry_after():
+    gate = threading.Event()
+    svc = make_service(max_pending=1)
+    srv = MappingHTTPServer(svc, port=0).start()
+    try:
+        # hold the single worker, then fill the one admission slot, so
+        # the next distinct request is shed deterministically
+        svc._queue.submit("blocker", lambda: gate.wait(30))
+        while svc._queue.pending() != 0:
+            pass
+        svc._queue.submit("filler", lambda: None)
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _post(srv.url, tiny_request(seed=7).to_dict())
+        assert ei.value.code == 429
+        assert ei.value.headers["Retry-After"] is not None
+        assert svc.stats["shed"] == 1
+    finally:
+        gate.set()
+        srv.close()

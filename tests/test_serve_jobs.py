@@ -1,0 +1,165 @@
+"""JobQueue edge semantics: staged shutdown, admission control, and
+``Job`` invariants.
+
+The happy paths (submit, coalesce, result) are exercised end-to-end in
+``test_serve_service.py``; this module pins the corners the service's
+correctness leans on — a submit racing ``shutdown``, the
+``_finish(exc=...)`` cancellation path, ``Job.completed`` invariants,
+depth-gauge consistency after a job fails, and the ``max_pending``
+shed/coalesce-while-full rules the HTTP 429 behavior is built from.
+"""
+import threading
+
+import pytest
+
+from repro.obs import Registry
+from repro.serve import Job, JobQueue, QueueFull, QueueShutdown
+
+
+def test_job_completed_invariants():
+    job = Job.completed("k", 42)
+    assert job.done()
+    assert job.status == "done"
+    assert job.n_attached == 1
+    assert job.result(timeout=0.1) == 42
+    # a done callback registered after completion fires immediately
+    seen = []
+    job.add_done_callback(lambda j: seen.append(j.key))
+    assert seen == ["k"]
+
+
+def test_job_failure_reraises_and_fires_callbacks():
+    q = JobQueue(max_workers=1)
+    try:
+        seen = []
+        job, coalesced = q.submit("boom", lambda: 1 / 0)
+        job.add_done_callback(lambda j: seen.append(j.status))
+        assert not coalesced
+        with pytest.raises(ZeroDivisionError):
+            job.result(timeout=5)
+        assert job.status == "failed"
+        assert seen == ["failed"]
+    finally:
+        q.shutdown()
+
+
+def test_depth_gauge_returns_to_zero_after_failure():
+    reg = Registry()
+    gauge = reg.gauge("serve.queue.depth")
+    q = JobQueue(max_workers=1, depth_gauge=gauge)
+    try:
+        ok, _ = q.submit("ok", lambda: "fine")
+        bad, _ = q.submit("bad", lambda: 1 / 0)
+        assert ok.result(timeout=5) == "fine"
+        with pytest.raises(ZeroDivisionError):
+            bad.result(timeout=5)
+    finally:
+        q.shutdown()
+    # failed jobs leave the in-flight table exactly like successes
+    assert q.inflight() == 0
+    assert gauge.value == 0
+
+
+def test_coalesce_counts_attachments():
+    gate = threading.Event()
+    q = JobQueue(max_workers=1)
+    try:
+        j1, c1 = q.submit("k", lambda: gate.wait(5) and "v")
+        j2, c2 = q.submit("k", lambda: "never-runs")
+        j3, c3 = q.submit("k", lambda: "never-runs")
+        assert (c1, c2, c3) == (False, True, True)
+        assert j1 is j2 is j3
+        assert j1.n_attached == 3
+        assert q.n_coalesced == 2
+        gate.set()
+        assert j1.result(timeout=5) == "v"
+    finally:
+        q.shutdown()
+
+
+def test_max_pending_sheds_but_coalescing_is_exempt():
+    gate = threading.Event()
+    q = JobQueue(max_workers=1, max_pending=2)
+    try:
+        blocker, _ = q.submit("blocker", lambda: gate.wait(5))
+        # wait until the worker has taken the blocker off the pending
+        # queue, so the two fillers below are the only pending entries
+        while q.pending() != 0:
+            pass
+        q.submit("fill-1", lambda: 1)
+        q.submit("fill-2", lambda: 2)
+        with pytest.raises(QueueFull):
+            q.submit("overflow", lambda: 3)
+        assert q.n_shed == 1
+        # identical-key submissions attach to in-flight jobs without a
+        # queue slot — never shed
+        j, coalesced = q.submit("fill-1", lambda: 1)
+        assert coalesced
+        assert q.n_shed == 1
+    finally:
+        gate.set()
+        q.shutdown()
+    assert q.inflight() == 0
+
+
+def test_shutdown_nowait_fails_pending_jobs():
+    gate = threading.Event()
+    q = JobQueue(max_workers=1)
+    running, _ = q.submit("running", lambda: gate.wait(5) and "done")
+    while q.pending() != 0 or running.status != "running":
+        pass
+    queued, _ = q.submit("queued", lambda: "never-runs")
+    q.shutdown(wait=False)
+    # the queued-but-never-started job fails loudly instead of hanging
+    # its waiters (the _finish(exc=...) path)
+    with pytest.raises(QueueShutdown):
+        queued.result(timeout=5)
+    assert queued.status == "failed"
+    # the running job still completes on its daemon worker
+    gate.set()
+    assert running.result(timeout=5) == "done"
+
+
+def test_submit_racing_shutdown_never_hangs():
+    """Hammer submit from one thread while another shuts down: every
+    submit either returns a job that terminates (result or
+    QueueShutdown) or raises QueueShutdown itself — nothing hangs."""
+    q = JobQueue(max_workers=2)
+    jobs = []
+    errs = []
+
+    def spam():
+        for i in range(200):
+            try:
+                job, _ = q.submit(f"k{i}", lambda i=i: i)
+                jobs.append((i, job))
+            except QueueShutdown:
+                errs.append(i)
+
+    t = threading.Thread(target=spam)
+    t.start()
+    q.shutdown(wait=False)
+    t.join()
+    assert len(jobs) + len(errs) == 200
+    for i, job in jobs:
+        try:
+            assert job.result(timeout=5) == i
+        except QueueShutdown:
+            pass   # cancelled while pending — also a clean termination
+    assert q.inflight() == 0
+
+
+def test_submit_after_shutdown_raises():
+    q = JobQueue(max_workers=1)
+    q.submit("k", lambda: 1)
+    q.shutdown(wait=True)
+    with pytest.raises(QueueShutdown):
+        q.submit("k2", lambda: 2)
+
+
+def test_shutdown_wait_drains_everything():
+    q = JobQueue(max_workers=2)
+    jobs = [q.submit(f"k{i}", lambda i=i: i * i)[0] for i in range(20)]
+    q.shutdown(wait=True)
+    assert [j.result(timeout=1) for j in jobs] == [i * i for i in range(20)]
+    assert q.inflight() == 0
