@@ -1,0 +1,164 @@
+"""Performance regression gate over the committed benchmark records.
+
+Reads ``BENCH_search.json`` and ``BENCH_serve.json`` — the numbers
+each PR commits from ``benchmarks/run.py`` — and enforces floors and
+ceilings on the rows that define the repo's performance story:
+
+* search path: the batched scoring engine must stay sub-microsecond
+  sustained and keep its headline speedups (engine vs reference
+  end-to-end, batched vs scalar engine), and the PR-7 telemetry
+  invariant must hold (obs-on/obs-off overhead ratio near 1x);
+* serve path: memo replays stay sub-5ms at p99, warm-restart journal
+  serves stay double-digit-ms, load-shedding answers 429 fast, and the
+  memo/journal hit rates the caching layers exist for stay high;
+* the flight-recorder-derived ``stage_breakdown`` must be present and
+  internally consistent (admit + evaluate + respond == total).
+
+The thresholds are deliberately loose — 2-30x slack over the committed
+values — so CI noise never trips them; a genuine regression (an
+accidentally quadratic scorer, a lock held across a sweep, a cache
+that stopped hitting) lands well past the slack. Exit 1 on any breach,
+exit 2 when a record file is missing/unreadable — both fail the CI
+leg, with per-check PASS/FAIL lines for the log.
+"""
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List, Optional
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def parse_derived(derived: str) -> Dict[str, str]:
+    """Split a ``k1=v1;k2=v2`` derived string into a dict."""
+    out: Dict[str, str] = {}
+    for part in derived.split(";"):
+        if "=" in part:
+            k, _, v = part.partition("=")
+            out[k] = v
+    return out
+
+
+def derived_float(row: Dict, key: str) -> Optional[float]:
+    """Numeric value of ``key`` in a row's derived string (``8.77x``
+    and plain ``8.77`` both parse); None when absent/unparsable."""
+    val = parse_derived(row.get("derived", "")).get(key)
+    if val is None:
+        return None
+    try:
+        return float(val.rstrip("x"))
+    except ValueError:
+        return None
+
+
+class Gate:
+    """Collects PASS/FAIL lines; any FAIL makes the run exit 1."""
+
+    def __init__(self) -> None:
+        self.failures = 0
+        self.checks = 0
+
+    def check(self, name: str, value: Optional[float], op: str,
+              limit: float) -> None:
+        self.checks += 1
+        if value is None:
+            self.failures += 1
+            print(f"check_perf: FAIL {name}: value missing "
+                  f"(wanted {op} {limit})")
+            return
+        ok = value <= limit if op == "<=" else value >= limit
+        status = "PASS" if ok else "FAIL"
+        if not ok:
+            self.failures += 1
+        print(f"check_perf: {status} {name}: {value:g} {op} {limit:g}")
+
+
+def load(path: str) -> Dict:
+    with open(path, "r", encoding="utf-8") as fh:
+        doc = json.load(fh)
+    if not isinstance(doc, dict):
+        raise ValueError(f"{path}: expected a JSON object")
+    return doc
+
+
+def check_search(rows: Dict[str, Dict], g: Gate) -> None:
+    """Search-path floors: engine speed, speedups, telemetry overhead."""
+    sus = rows.get("bench_search.scoring_engine_sustained", {})
+    g.check("scoring_engine_sustained.us_per_call",
+            sus.get("us_per_call"), "<=", 1.0)
+    e2e = rows.get("bench_search.e2e_resnet18_transform_refine", {})
+    g.check("e2e_resnet18_transform_refine.speedup",
+            derived_float(e2e, "speedup"), ">=", 3.0)
+    bat = rows.get("bench_search.scoring_engine_sustained_batched", {})
+    g.check("scoring_engine_sustained_batched.speedup_vs_prev",
+            derived_float(bat, "speedup_vs_prev"), ">=", 5.0)
+    obs = rows.get("bench_search.obs_overhead_sustained", {})
+    g.check("obs_overhead_sustained.ratio",
+            derived_float(obs, "ratio"), "<=", 1.10)
+
+
+def check_serve(doc: Dict, g: Gate) -> None:
+    """Serve-path ceilings/floors plus stage-breakdown consistency."""
+    phases = doc.get("phases") or {}
+    g.check("memo_c4.p99_ms",
+            (phases.get("memo_c4") or {}).get("p99_ms"), "<=", 5.0)
+    g.check("journal_c2.p99_ms",
+            (phases.get("journal_c2") or {}).get("p99_ms"), "<=", 100.0)
+    storm = doc.get("http_storm") or {}
+    g.check("http_storm.shed_p99_ms",
+            storm.get("shed_p99_ms"), "<=", 100.0)
+    rates = doc.get("rates") or {}
+    g.check("rates.memo_hit_rate",
+            rates.get("memo_hit_rate"), ">=", 0.4)
+    g.check("rates.journal_hit_rate",
+            rates.get("journal_hit_rate"), ">=", 0.99)
+    sb = doc.get("stage_breakdown") or {}
+    g.check("stage_breakdown.n", sb.get("n"), ">=", 1)
+    g.check("stage_breakdown.evaluate_ms",
+            sb.get("evaluate_ms"), ">=", 0.001)
+    # the stage identity survives aggregation: the mean stage times
+    # must sum to the mean total (each record satisfies it exactly)
+    if all(k in sb for k in ("admit_wait_ms", "evaluate_ms",
+                             "respond_ms", "total_ms")):
+        drift = abs(sb["admit_wait_ms"] + sb["evaluate_ms"]
+                    + sb["respond_ms"] - sb["total_ms"])
+        g.check("stage_breakdown.identity_drift_ms", drift, "<=",
+                max(0.01, 0.01 * sb["total_ms"]))
+    else:
+        g.check("stage_breakdown.identity_drift_ms", None, "<=", 0.01)
+
+
+def main() -> int:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--search", default=os.path.join(
+        REPO, "BENCH_search.json"),
+        help="committed search benchmark record")
+    p.add_argument("--serve", default=os.path.join(
+        REPO, "BENCH_serve.json"),
+        help="committed serve benchmark record")
+    args = p.parse_args()
+
+    g = Gate()
+    failed_load = False
+    for path, fn, pick in ((args.search, check_search,
+                            lambda d: d.get("rows") or {}),
+                           (args.serve, check_serve, lambda d: d)):
+        try:
+            doc = load(path)
+        except (OSError, ValueError, json.JSONDecodeError) as e:
+            print(f"check_perf: FAIL cannot read {path}: {e}")
+            failed_load = True
+            continue
+        fn(pick(doc), g)
+    if failed_load:
+        return 2
+    if g.failures:
+        print(f"check_perf: {g.failures}/{g.checks} checks FAILED")
+        return 1
+    print(f"check_perf: OK ({g.checks} checks)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

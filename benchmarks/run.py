@@ -9,6 +9,7 @@ Entry points::
     python benchmarks/run.py dse-worker [...]   # join a distributed sweep
     python benchmarks/run.py dse-coordinator [...]  # drive one
     python benchmarks/run.py obs-report [...]   # render saved telemetry
+    python benchmarks/run.py obs-profile [...]  # analyze a span trace
 
 All also work as ``python -m benchmarks.run`` with ``PYTHONPATH=src``;
 run as a plain script the repo root and ``src/`` are bootstrapped onto
@@ -35,6 +36,11 @@ waiting requests. Every subcommand takes
 to a JSONL trace, the end-of-run metrics snapshot to a JSON file that
 ``obs-report`` renders as cache hit rates, latency percentiles and
 fleet/service counters (``--prometheus`` for scrape-format text).
+``obs-profile`` analyzes the span JSONL a ``--trace-out`` run wrote:
+self/total-time attribution per span name, the critical path, and
+optional Chrome trace-event JSON (``--chrome-out``, loadable in
+Perfetto / chrome://tracing) and folded-stack flamegraph text
+(``--folded-out``).
 """
 import argparse
 import dataclasses
@@ -75,21 +81,25 @@ DEFAULT_METRICS_OUT = os.path.join("dse_runs", "obs_metrics.json")
 def _setup_obs(args):
     """Enable process-wide telemetry per the CLI flags; returns a
     finalizer that writes the registry snapshot to ``--metrics-out``
-    and turns telemetry back off. With no obs flags the finalizer is a
-    no-op and telemetry stays disabled."""
+    and turns telemetry back off (pass ``extra=...`` to merge
+    additional top-level keys — e.g. the serve flight recorder — into
+    the saved snapshot). With no obs flags the finalizer is a no-op
+    and telemetry stays disabled."""
     import json
     trace_out = getattr(args, "trace_out", None)
     metrics_out = getattr(args, "metrics_out", None)
     if not trace_out and not metrics_out:
-        return lambda: None
+        return lambda extra=None: None
     from repro import obs
     metrics_out = metrics_out or DEFAULT_METRICS_OUT
     obs.enable(trace_path=trace_out,
                sample_every=max(1, getattr(args, "obs_sample", 1)))
 
-    def finish() -> None:
+    def finish(extra=None) -> None:
         reg = obs.registry()
         snap = reg.snapshot() if reg is not None else {}
+        if extra:
+            snap.update(extra)
         obs.disable()          # flushes + closes the trace sink
         d = os.path.dirname(metrics_out)
         if d:
@@ -146,8 +156,57 @@ def obs_report_main(argv) -> None:
               "subcommand with --metrics-out/--trace-out first",
               file=sys.stderr)
         sys.exit(2)
+    except ValueError as e:
+        # empty or truncated snapshot (e.g. a crashed run) — report,
+        # don't traceback
+        print(f"obs-report: {args.metrics} is not a metrics snapshot "
+              f"({e})", file=sys.stderr)
+        sys.exit(2)
+    if not isinstance(snap, dict):
+        print(f"obs-report: {args.metrics} is not a metrics snapshot "
+              "(expected a JSON object)", file=sys.stderr)
+        sys.exit(2)
     render = obs.render_prometheus if args.prometheus else obs.render_report
     sys.stdout.write(render(snap))
+
+
+def obs_profile_main(argv) -> None:
+    """Analyze a span JSONL trace (``--trace-out``): per-span-name
+    self/total-time attribution, the critical path, and optional
+    Chrome trace-event / folded-flamegraph exports."""
+    from repro.obs import profile as obs_profile
+
+    p = argparse.ArgumentParser(
+        prog="run.py obs-profile",
+        description="Trace analytics for a repro.obs span JSONL: "
+                    "where did the run's wall clock go (self-time "
+                    "attribution, critical path), plus Chrome "
+                    "trace-event JSON (Perfetto / chrome://tracing) "
+                    "and folded-stack flamegraph exports.")
+    p.add_argument("--trace", required=True, metavar="PATH",
+                   help="span JSONL written by --trace-out")
+    p.add_argument("--chrome-out", default=None, metavar="PATH",
+                   help="write Chrome trace-event JSON to PATH")
+    p.add_argument("--folded-out", default=None, metavar="PATH",
+                   help="write folded stacks ('a;b;c <us>' lines, "
+                        "flamegraph.pl-compatible) to PATH")
+    p.add_argument("--top", type=int, default=15, metavar="N",
+                   help="rows in the self-time table "
+                        "(default: %(default)s)")
+    args = p.parse_args(argv)
+    if not os.path.exists(args.trace):
+        print(f"obs-profile: no trace at {args.trace} — run a "
+              "subcommand with --trace-out first", file=sys.stderr)
+        sys.exit(2)
+    trace = obs_profile.parse_trace(args.trace)
+    sys.stdout.write(obs_profile.render_profile(trace, top=args.top))
+    if args.chrome_out:
+        obs_profile.write_chrome_trace(trace, args.chrome_out)
+        print(f"obs-profile: chrome trace -> {args.chrome_out} "
+              "(load in Perfetto or chrome://tracing)")
+    if args.folded_out:
+        obs_profile.write_folded(trace, args.folded_out)
+        print(f"obs-profile: folded stacks -> {args.folded_out}")
 
 
 def bench_main(argv=()) -> None:
@@ -571,6 +630,21 @@ def serve_http_main(argv) -> None:
     p.add_argument("--bundle-cap", type=int, default=8, metavar="N",
                    help="arch bundles the shared overlap engine "
                         "retains across requests (LRU)")
+    p.add_argument("--flight-cap", type=int, default=256, metavar="N",
+                   help="per-request flight-recorder ring size "
+                        "(GET /v1/debug/requests; 0 disables)")
+    p.add_argument("--slow-threshold", type=float, default=1.0,
+                   metavar="S", help="requests at/above S seconds keep "
+                   "full detail in the slow ring")
+    p.add_argument("--window", type=float, default=60.0, metavar="S",
+                   help="sliding window (seconds) behind the recent "
+                        "p50/p99 latency gauges (0 disables)")
+    p.add_argument("--slo-target", type=float, default=None, metavar="S",
+                   help="latency SLO target in seconds: publishes "
+                        "serve.slo.ok/breach counters and the windowed "
+                        "burn-rate gauge")
+    p.add_argument("--slo-goal", type=float, default=0.99,
+                   help="SLO goal fraction (default: %(default)s)")
     _obs_flags(p)
     args = p.parse_args(argv)
 
@@ -586,7 +660,12 @@ def serve_http_main(argv) -> None:
         memo_cap=args.memo_cap, nest_cap=args.memo_cap,
         persist_dir=args.persist_dir,
         compact_every_s=args.compact_every,
-        engine_bundle_cap=args.bundle_cap)
+        engine_bundle_cap=args.bundle_cap,
+        flight_cap=args.flight_cap,
+        slow_threshold_s=args.slow_threshold,
+        window_s=args.window,
+        slo_target_s=args.slo_target,
+        slo_goal=args.slo_goal)
     server = MappingHTTPServer(svc, host=args.host, port=args.port)
     print(f"serve-http: listening on {server.url} journal={journal} "
           f"workers={args.max_workers} max_pending={args.max_pending}",
@@ -597,7 +676,10 @@ def serve_http_main(argv) -> None:
         print("serve-http: draining...", flush=True)
     finally:
         server.close()
-        finish_obs()
+        # the saved snapshot carries the flight ring so obs-report can
+        # render the per-request section offline
+        finish_obs(extra={"flight": svc.flight.snapshot()}
+                   if svc.flight.enabled else None)
 
 
 def main() -> None:
@@ -614,12 +696,15 @@ def main() -> None:
         dse_coordinator_main(argv[1:])
     elif argv and argv[0] == "obs-report":
         obs_report_main(argv[1:])
+    elif argv and argv[0] == "obs-profile":
+        obs_profile_main(argv[1:])
     elif not argv or argv[0] == "bench":
         bench_main(argv[1:] if argv else [])
     else:
         print(f"unknown subcommand {argv[0]!r}; use 'bench', 'dse', "
               "'serve-dse', 'serve-http', 'dse-worker', "
-              "'dse-coordinator' or 'obs-report'", file=sys.stderr)
+              "'dse-coordinator', 'obs-report' or 'obs-profile'",
+              file=sys.stderr)
         sys.exit(2)
 
 

@@ -11,6 +11,15 @@ Section 12). Three parts:
   process-global enable/disable switch (off ⇒ shared no-ops).
 * :mod:`repro.obs.report` — ``render_report`` turns a snapshot into
   the ``run.py obs-report`` terminal summary.
+* :mod:`repro.obs.profile` — span-trace analytics (call tree, self/
+  total-time attribution, critical path, Chrome trace-event JSON and
+  folded-flamegraph export) behind ``run.py obs-profile``.
+* :mod:`repro.obs.flight` — ``FlightRecorder``, the bounded ring of
+  per-request serving records (stage timings, provenance, slow-request
+  full-detail retention) behind ``GET /v1/debug/requests``.
+* :mod:`repro.obs.window` — ``WindowHistogram``/``SLOTracker``,
+  sliding time-window quantiles and SLO burn rate published as recent
+  p50/p99 gauges next to the all-time histograms.
 
 Typical call-site usage::
 
@@ -25,17 +34,26 @@ instrumented at import time see a registry enabled later via
 telemetry observes, it never steers — results are byte-identical with
 telemetry on, off, or sampled (enforced by ``tests/test_obs.py``).
 """
+from .flight import FlightRecorder
 from .metrics import (Counter, Gauge, Histogram, Registry,
-                      merge_snapshots, quantile, render_prometheus)
+                      escape_label_value, merge_snapshots, quantile,
+                      render_prometheus)
+from .profile import (Trace, attribution, chrome_trace, critical_path,
+                      folded_stacks, parse_trace, render_profile)
 from .report import render_report
 from .trace import (NullTelemetry, Telemetry, TraceSink, current, disable,
                     enable, enabled, event, inc, observe, registry,
                     set_gauge, span)
+from .window import SLOTracker, WindowHistogram
 
 __all__ = [
     "Counter", "Gauge", "Histogram", "Registry",
-    "merge_snapshots", "quantile", "render_prometheus",
+    "escape_label_value", "merge_snapshots", "quantile",
+    "render_prometheus",
     "render_report",
+    "Trace", "attribution", "chrome_trace", "critical_path",
+    "folded_stacks", "parse_trace", "render_profile",
+    "FlightRecorder", "SLOTracker", "WindowHistogram",
     "NullTelemetry", "Telemetry", "TraceSink",
     "current", "disable", "enable", "enabled", "event",
     "inc", "observe", "registry", "set_gauge", "span",

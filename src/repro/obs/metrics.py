@@ -214,17 +214,48 @@ def _prom_name(name: str) -> str:
     return "repro_" + re.sub(r"[^a-zA-Z0-9_]", "_", name)
 
 
-def render_prometheus(snap: Dict) -> str:
-    """Prometheus text exposition of one ``Registry.snapshot()``."""
+def escape_label_value(value: str) -> str:
+    """Escape one label value per the Prometheus text exposition format:
+    backslash, double-quote and newline must be escaped inside the
+    quoted value (``\\\\``, ``\\"``, ``\\n``) — anything else through a
+    scraper unescaped silently corrupts the series."""
+    return (str(value).replace("\\", "\\\\").replace('"', '\\"')
+            .replace("\n", "\\n"))
+
+
+def _label_str(labels: Optional[Dict[str, str]],
+               extra: Optional[Tuple[str, str]] = None) -> str:
+    """Render a ``{k="v",...}`` label block (empty string when none).
+    Values pass through ``escape_label_value``; the ``extra`` pair (the
+    histogram ``le`` bound, already exposition-safe) renders last."""
+    pairs = [(k, escape_label_value(v))
+             for k, v in sorted((labels or {}).items())]
+    if extra is not None:
+        pairs.append(extra)
+    if not pairs:
+        return ""
+    return "{" + ",".join(f'{k}="{v}"' for k, v in pairs) + "}"
+
+
+def render_prometheus(snap: Dict,
+                      labels: Optional[Dict[str, str]] = None) -> str:
+    """Prometheus text exposition of one ``Registry.snapshot()``.
+
+    ``labels`` attaches constant labels (e.g. ``{"instance": ...}``) to
+    every emitted series, values escaped per the exposition format.
+    Histograms emit the full conformant series set: cumulative
+    ``_bucket{le=...}`` lines, a ``+Inf`` bucket equal to ``_count``,
+    and the ``_sum``/``_count`` pair."""
     out: List[str] = []
+    base = _label_str(labels)
     for n in sorted(snap.get("counters") or {}):
         pn = _prom_name(n)
         out.append(f"# TYPE {pn}_total counter")
-        out.append(f"{pn}_total {snap['counters'][n]:g}")
+        out.append(f"{pn}_total{base} {snap['counters'][n]:g}")
     for n in sorted(snap.get("gauges") or {}):
         pn = _prom_name(n)
         out.append(f"# TYPE {pn} gauge")
-        out.append(f"{pn} {snap['gauges'][n]:g}")
+        out.append(f"{pn}{base} {snap['gauges'][n]:g}")
     for n in sorted(snap.get("histograms") or {}):
         h = snap["histograms"][n]
         pn = _prom_name(n)
@@ -232,8 +263,10 @@ def render_prometheus(snap: Dict) -> str:
         cum = 0
         for bound, c in zip(h["bounds"], h["counts"]):
             cum += c
-            out.append(f'{pn}_bucket{{le="{bound:g}"}} {cum}')
-        out.append(f'{pn}_bucket{{le="+Inf"}} {h["count"]}')
-        out.append(f"{pn}_sum {h['sum']:g}")
-        out.append(f"{pn}_count {h['count']}")
+            ls = _label_str(labels, extra=("le", f"{bound:g}"))
+            out.append(f"{pn}_bucket{ls} {cum}")
+        inf = _label_str(labels, extra=("le", "+Inf"))
+        out.append(f'{pn}_bucket{inf} {h["count"]}')
+        out.append(f"{pn}_sum{base} {h['sum']:g}")
+        out.append(f"{pn}_count{base} {h['count']}")
     return "\n".join(out) + ("\n" if out else "")

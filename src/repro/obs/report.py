@@ -130,9 +130,46 @@ def render_report(snap: Dict) -> str:
         h = _hist_line(snap, "serve.request_seconds")
         if h:
             lines.append(f"  request latency    {h}")
+        wp50 = g.get("serve.request_seconds.window.p50")
+        wp99 = g.get("serve.request_seconds.window.p99")
+        if wp50 is not None or wp99 is not None:
+            n = int(g.get("serve.request_seconds.window.count", 0))
+            lines.append(f"  recent latency     n={n} "
+                         f"p50={(wp50 or 0) * 1e3:.3f}ms "
+                         f"p99={(wp99 or 0) * 1e3:.3f}ms "
+                         f"(sliding window)")
+        slo_ok = c.get("serve.slo.ok")
+        slo_breach = c.get("serve.slo.breach")
+        if slo_ok is not None or slo_breach is not None:
+            burn = g.get("serve.slo.burn_rate", 0.0)
+            lines.append(f"  slo                ok={int(slo_ok or 0)} "
+                         f"breach={int(slo_breach or 0)} "
+                         f"burn_rate={burn:.2f}")
         if "serve.queue.depth" in g:
             lines.append(f"  queue depth (last) "
                          f"{int(g['serve.queue.depth'])}")
+
+    flight = snap.get("flight") or []
+    if flight:
+        sec("flight recorder (most recent first)")
+        lines.append(f"  {'key':<14} {'from':<9} {'outcome':<7} "
+                     f"{'admit_ms':>9} {'eval_ms':>9} {'resp_ms':>9} "
+                     f"{'total_ms':>9} {'eval':>5}")
+        for rec in flight[:10]:
+            lines.append(
+                f"  {str(rec.get('key', ''))[:12]:<14} "
+                f"{str(rec.get('served_from', ''))[:8]:<9} "
+                f"{str(rec.get('outcome', ''))[:7]:<7} "
+                f"{rec.get('admit_wait_s', 0) * 1e3:>9.2f} "
+                f"{rec.get('evaluate_s', 0) * 1e3:>9.2f} "
+                f"{rec.get('respond_s', 0) * 1e3:>9.2f} "
+                f"{rec.get('total_s', 0) * 1e3:>9.2f} "
+                f"{int(rec.get('evaluated', 0)):>5}"
+                + (" SLOW" if rec.get("slow") else ""))
+        n_slow = sum(1 for r in flight if r.get("slow"))
+        if n_slow:
+            lines.append(f"  ({n_slow} slow request(s) retained with "
+                         "full detail — GET /v1/debug/requests/<key>)")
 
     if not lines:
         return "(no metrics recorded)\n"

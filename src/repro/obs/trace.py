@@ -58,7 +58,7 @@ class TraceSink:
 class _Span:
     """Context manager timing one named span; writes JSONL on exit."""
 
-    __slots__ = ("_tel", "_name", "_attrs", "_t0")
+    __slots__ = ("_tel", "_name", "_attrs", "_t0", "_wall0")
 
     def __init__(self, tel: "Telemetry", name: str, attrs: Dict):
         self._tel = tel
@@ -67,6 +67,7 @@ class _Span:
 
     def __enter__(self) -> "_Span":
         self._tel._depth().append(self._name)
+        self._wall0 = time.time()
         self._t0 = time.perf_counter()
         return self
 
@@ -74,7 +75,8 @@ class _Span:
         dur = time.perf_counter() - self._t0
         stack = self._tel._depth()
         stack.pop()
-        self._tel._emit_span(self._name, dur, len(stack), self._attrs)
+        self._tel._emit_span(self._name, dur, len(stack), self._attrs,
+                             self._wall0)
 
 
 class _NoopSpan:
@@ -131,9 +133,18 @@ class Telemetry:
         return _Span(self, name, attrs)
 
     def _emit_span(self, name: str, dur_s: float, depth: int,
-                   attrs: Dict) -> None:
-        ev = {"ev": "span", "name": name, "ts": time.time(),
-              "dur_s": dur_s, "depth": depth}
+                   attrs: Dict, wall0: Optional[float] = None) -> None:
+        # ``ts`` (end) and ``ts0`` (start) share one wall-clock base, so
+        # trace analytics never reconstruct starts by mixing the
+        # ``time.time`` and ``perf_counter`` bases; ``tid`` keys the
+        # per-thread span streams for call-tree/Chrome-trace export.
+        # Older traces lack ``ts0``/``tid`` — ``repro.obs.profile``
+        # falls back to ``ts - dur_s`` and a single implicit thread.
+        end = time.time()
+        ev = {"ev": "span", "name": name, "ts": end,
+              "ts0": wall0 if wall0 is not None else end - dur_s,
+              "dur_s": dur_s, "depth": depth,
+              "tid": threading.get_ident()}
         ev.update(attrs)
         self.sink.write(ev)
         self.registry.histogram("span." + name).observe(dur_s)

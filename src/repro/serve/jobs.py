@@ -38,6 +38,7 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
 from collections import deque
 from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
@@ -71,12 +72,24 @@ class Job:
     coalesced onto it. ``add_done_callback`` registers a callable fired
     exactly once with the job after it finishes (immediately if it
     already has) — the service records per-submission latency through
-    it, so coalesced waiters are not invisible to the histograms."""
+    it, so coalesced waiters are not invisible to the histograms.
+
+    Stage timestamps (``time.perf_counter`` values, set by the queue's
+    stage threads; ``None`` until the stage is reached) let the flight
+    recorder attribute a request's wall clock to its pipeline stages:
+    ``t_submit`` (admitted to the pending queue), ``t_eval_start`` /
+    ``t_eval_end`` (the evaluate stage ran the callable), ``t_finish``
+    (the respond stage made the result readable). They are telemetry —
+    nothing in the queue branches on them."""
 
     def __init__(self, key: str):
         self.key = key
         self.status = PENDING
         self.n_attached = 1
+        self.t_submit: Optional[float] = None
+        self.t_eval_start: Optional[float] = None
+        self.t_eval_end: Optional[float] = None
+        self.t_finish: Optional[float] = None
         self._event = threading.Event()
         self._result: Any = None
         self._exc: Optional[BaseException] = None
@@ -116,6 +129,8 @@ class Job:
 
     def _finish(self, result: Any = None,
                 exc: Optional[BaseException] = None) -> None:
+        if self.t_finish is None:
+            self.t_finish = time.perf_counter()
         self._result = result
         self._exc = exc
         self.status = FAILED if exc is not None else DONE
@@ -183,6 +198,7 @@ class JobQueue:
                     f"{len(self._pending)} jobs pending >= "
                     f"max_pending={self.max_pending}")
             job = Job(key)
+            job.t_submit = time.perf_counter()
             self._inflight[key] = job
             self._pending.append((job, fn))
             self._set_depth_locked()
@@ -243,10 +259,12 @@ class JobQueue:
                     return
                 job, fn = self._pending.popleft()
                 job.status = RUNNING
+            job.t_eval_start = time.perf_counter()
             try:
                 result, exc = fn(), None
             except BaseException as e:  # surfaced via Job.result
                 result, exc = None, e
+            job.t_eval_end = time.perf_counter()
             # bounded: blocks (backpressure) when the responder lags
             self._respond_q.put((job, result, exc))
 

@@ -62,6 +62,8 @@ from typing import Any, Dict, List, Optional, Tuple
 
 from .. import obs
 from ..obs import Registry
+from ..obs.flight import FlightRecorder
+from ..obs.window import SLOTracker, WindowHistogram
 from ..core.engine import OverlapEngine
 from ..core.search import combine_objective
 from ..dse.driver import (JOURNAL_ROOT, execute_sweep, frontier_points,
@@ -252,7 +254,15 @@ class MappingService:
     share a STOP file, while identical re-requests reuse their shards).
     ``persist_dir`` write-throughs the memo and nest caches to JSONL so
     a restart starts warm; ``compact_every_s`` runs ``compact()`` (the
-    journal and both persisted caches) on a background cadence."""
+    journal and both persisted caches) on a background cadence.
+
+    Observability (purely observational — DESIGN.md Sections 12/14):
+    ``flight_cap`` bounds the per-request flight-recorder ring (0
+    disables it), with full detail retained for requests slower than
+    ``slow_threshold_s``; ``window_s`` sizes the sliding window behind
+    the recent-latency p50/p99 gauges (0 disables); ``slo_target_s``
+    (when set) tracks an availability SLO at ``slo_goal`` — per-request
+    ok/breach counters plus a windowed burn-rate gauge."""
 
     def __init__(self, journal_path: Optional[str] = None,
                  journal: Optional[RunJournal] = None,
@@ -264,7 +274,12 @@ class MappingService:
                  nest_cap: int = 256,
                  persist_dir: Optional[str] = None,
                  compact_every_s: Optional[float] = None,
-                 engine_bundle_cap: int = 8):
+                 engine_bundle_cap: int = 8,
+                 flight_cap: int = 256,
+                 slow_threshold_s: float = 1.0,
+                 window_s: float = 60.0,
+                 slo_target_s: Optional[float] = None,
+                 slo_goal: float = 0.99):
         assert journal_path is None or journal is None, \
             "pass a journal_path or a journal, not both"
         self.journal = journal if journal is not None \
@@ -294,6 +309,16 @@ class MappingService:
         self._engine = OverlapEngine()
         self._engine_lock = threading.Lock()
         self.engine_bundle_cap = engine_bundle_cap
+        # flight recorder + sliding windows: observational only — no
+        # request-path code reads them, so any setting produces
+        # byte-identical responses (pinned by the determinism tests)
+        self.flight = FlightRecorder(cap=flight_cap,
+                                     slow_threshold_s=slow_threshold_s)
+        self._window = WindowHistogram(window_s=window_s) \
+            if window_s and window_s > 0 else None
+        self._slo = SLOTracker(slo_target_s, goal=slo_goal,
+                               window_s=window_s or 60.0) \
+            if slo_target_s is not None else None
         self._load_persisted()
         self._queue = JobQueue(
             max_workers=max_workers, max_pending=max_pending,
@@ -320,8 +345,42 @@ class MappingService:
 
     def metrics_snapshot(self) -> Dict:
         """Full snapshot of the service's metrics registry (counters,
-        queue-depth gauge, request-latency histogram)."""
-        return self._reg.snapshot()
+        queue-depth gauge, request-latency histogram), refreshed with
+        the sliding-window recent-latency gauges and the SLO burn rate
+        (computed at scrape time, not on the request path), plus the
+        flight-recorder ring under the ``"flight"`` key (ignored by
+        ``render_prometheus``; rendered by ``render_report``)."""
+        self._publish_window_gauges()
+        snap = self._reg.snapshot()
+        if self.flight.enabled:
+            snap["flight"] = self.flight.snapshot()
+        return snap
+
+    def _publish_window_gauges(self) -> None:
+        if self._window is not None:
+            g = self._reg.gauge
+            g("serve.request_seconds.window.count").set(
+                float(self._window.count()))
+            g("serve.request_seconds.window.p50").set(
+                self._window.quantile(0.50))
+            g("serve.request_seconds.window.p99").set(
+                self._window.quantile(0.99))
+        if self._slo is not None:
+            self._reg.gauge("serve.slo.burn_rate").set(
+                self._slo.burn_rate())
+            self._reg.gauge("serve.slo.target_s").set(self._slo.target_s)
+
+    def _observe_request(self, dur_s: float) -> None:
+        """One per-submission latency observation, fanned out to the
+        all-time histogram, the sliding window, and the SLO tracker."""
+        self._reg.histogram("serve.request_seconds").observe(dur_s)
+        if self._window is not None:
+            self._window.observe(dur_s)
+        if self._slo is not None:
+            self._slo.observe(dur_s)
+            self._reg.counter(
+                "serve.slo.ok" if dur_s <= self._slo.target_s
+                else "serve.slo.breach").inc()
 
     @property
     def registry(self) -> Registry:
@@ -347,18 +406,26 @@ class MappingService:
         if memo is not None:
             self._reg.counter("serve.memo_hits").inc()
             self._reg.counter("serve.served_from.memo").inc()
-            self._reg.histogram("serve.request_seconds").observe(
-                time.perf_counter() - t0)
+            dur = time.perf_counter() - t0
+            self._observe_request(dur)
             # provenance counts work done for THIS answer: a replay
             # evaluated nothing and took no wall clock
-            return Job.completed(key, dataclasses.replace(
+            resp = dataclasses.replace(
                 memo, served_from="memo", evaluated=0, from_journal=0,
-                wall_s=0.0))
+                wall_s=0.0)
+            self.flight.record(self._flight_rec(
+                req, key, served_from="memo", outcome="ok",
+                status=resp.status, total_s=dur, resp=resp))
+            return Job.completed(key, resp)
+        extra: Dict[str, Any] = {}
         try:
             job, coalesced = self._queue.submit(
-                key, lambda: self._run(req, key, t0))
+                key, lambda: self._run(req, key, t0, extra))
         except QueueFull:
             self._reg.counter("serve.shed").inc()
+            self.flight.record(self._flight_rec(
+                req, key, served_from="shed", outcome="shed",
+                status="shed", total_s=time.perf_counter() - t0))
             raise
         if coalesced:
             self._reg.counter("serve.coalesced").inc()
@@ -366,9 +433,21 @@ class MappingService:
             # the originating submission's t0 flows through _run; this
             # attachment records its own wait so coalesced waiters are
             # visible in the latency histogram too
-            job.add_done_callback(lambda _job: self._reg.histogram(
-                "serve.request_seconds").observe(
-                    time.perf_counter() - t0))
+            def _on_done(done_job: Job, _t0: float = t0) -> None:
+                dur = time.perf_counter() - _t0
+                self._observe_request(dur)
+                self.flight.record(self._flight_rec(
+                    req, key, served_from="coalesced",
+                    outcome="error" if done_job.status == "failed"
+                    else "ok",
+                    status="error" if done_job.status == "failed"
+                    else "ok",
+                    admit_wait_s=dur, total_s=dur))
+            job.add_done_callback(_on_done)
+        else:
+            job.add_done_callback(
+                lambda done_job: self._flight_finish(req, key, done_job,
+                                                     extra))
         return job
 
     def request(self, req: MappingRequest,
@@ -409,8 +488,72 @@ class MappingService:
     def _space(self, family: str) -> ParamSpace:
         return self._spaces.get(family) or get_space(family)
 
+    def _flight_rec(self, req: MappingRequest, key: str, *,
+                    served_from: str, outcome: str, status: str,
+                    admit_wait_s: float = 0.0, evaluate_s: float = 0.0,
+                    respond_s: float = 0.0, total_s: float = 0.0,
+                    resp: Optional[MappingResponse] = None) -> Dict:
+        """One compact flight record (``obs.flight.CORE_FIELDS``)."""
+        rec = {"key": key, "network": req.network, "family": req.family,
+               "objective": req.objective, "served_from": served_from,
+               "outcome": outcome, "status": status,
+               "admit_wait_s": admit_wait_s, "evaluate_s": evaluate_s,
+               "respond_s": respond_s, "total_s": total_s,
+               "evaluated": 0, "from_journal": 0, "proposed": 0,
+               "deadline_hit": False}
+        if resp is not None:
+            rec.update(evaluated=resp.evaluated,
+                       from_journal=resp.from_journal,
+                       proposed=resp.proposed,
+                       deadline_hit=resp.deadline_hit)
+        return rec
+
+    def _flight_finish(self, req: MappingRequest, key: str, job: Job,
+                       extra: Dict) -> None:
+        """Done-callback for fresh (non-coalesced) jobs: turn the job's
+        stage timestamps into one flight record. By construction
+        ``admit_wait + evaluate + respond == t_finish - t_submit``; the
+        published ``serve.request_seconds`` observation happens at the
+        end of ``_run`` (the evaluate stage), so it equals
+        admit_wait + evaluate up to the submit-side epsilon — respond
+        is the documented slack (DESIGN.md Section 14)."""
+        ts, te0 = job.t_submit, job.t_eval_start
+        te1, tf = job.t_eval_end, job.t_finish
+        admit = (te0 - ts) if ts is not None and te0 is not None else 0.0
+        evaluate = (te1 - te0) \
+            if te0 is not None and te1 is not None else 0.0
+        respond = (tf - te1) if te1 is not None and tf is not None else 0.0
+        total = (tf - ts) if ts is not None and tf is not None else 0.0
+        resp: Optional[MappingResponse] = None
+        err: Optional[str] = None
+        if job.status == "failed":
+            try:
+                job.result(timeout=0)
+            except BaseException as e:   # the job's stored exception
+                err = f"{type(e).__name__}: {e}"
+        else:
+            resp = job._result
+        rec = self._flight_rec(
+            req, key,
+            served_from=resp.served_from if resp is not None else "error",
+            outcome="ok" if err is None else "error",
+            status=resp.status if resp is not None else "error",
+            admit_wait_s=admit, evaluate_s=evaluate, respond_s=respond,
+            total_s=total, resp=resp)
+        detail: Dict[str, Any] = {"request": req.to_dict()}
+        if err is not None:
+            detail["error"] = err
+        if resp is not None:
+            detail["summary"] = resp.summary
+            detail["wall_s"] = resp.wall_s
+            detail["frontier_size"] = len(resp.frontier_points)
+        if extra.get("engine_delta") is not None:
+            detail["engine_delta"] = extra["engine_delta"]
+        self.flight.record(rec, detail)
+
     def _run(self, req: MappingRequest, key: str,
-             t0: Optional[float] = None) -> MappingResponse:
+             t0: Optional[float] = None,
+             extra: Optional[Dict] = None) -> MappingResponse:
         self._reg.counter("serve.sweeps").inc()
         with obs.span("serve.request", network=req.network,
                       family=req.family, budget=req.budget):
@@ -429,13 +572,23 @@ class MappingService:
                 # same-family request starts warm; the LRU cap keeps a
                 # many-tenant server's memory bounded
                 with self._engine_lock:
+                    before = dict(self._engine.stats)
                     res = execute_sweep(
                         cfg, space=self._space(req.family),
                         journal=self.journal,
                         deadline_s=req.deadline_s,
                         engine=self._engine)
                     self._engine.evict_lru(self.engine_bundle_cap)
-                self._engine.publish_metrics(self._reg)
+                    # publish inside the lock so the before/after stats
+                    # diff is this sweep's alone (publish folds the
+                    # PerfCache hit/miss totals into ``stats`` first)
+                    self._engine.publish_metrics(self._reg)
+                    after = dict(self._engine.stats)
+                if extra is not None:
+                    extra["engine_delta"] = {
+                        k: after[k] - before.get(k, 0)
+                        for k in sorted(after)
+                        if after[k] != before.get(k, 0)}
             resp = self._respond(req, key, res)
         # deadline-truncated answers are NOT memoized: a repeat must
         # re-run (replaying the journal prefix near-free) so repeated
@@ -448,8 +601,7 @@ class MappingService:
                                    {"key": key, "resp": resp.to_dict()})
         self._reg.counter("serve.served_from." + resp.served_from).inc()
         if t0 is not None:
-            self._reg.histogram("serve.request_seconds").observe(
-                time.perf_counter() - t0)
+            self._observe_request(time.perf_counter() - t0)
         return resp
 
     def _absorb(self, res: DSEResult) -> None:

@@ -21,6 +21,13 @@ Routes (DESIGN.md Section 13):
   exposition format (``repro.obs.render_prometheus``).
 * ``GET /v1/healthz`` — liveness: ``{"status": "ok"}`` plus queue
   depth, always 200 while the process serves.
+* ``GET /v1/debug/requests`` — the flight recorder's recent ring,
+  newest first (``?limit=N`` caps the list, ``?slow=1`` reads the
+  full-detail slow ring); 404 when the recorder is disabled
+  (``flight_cap=0``).
+* ``GET /v1/debug/requests/<key>`` — the fullest record held for one
+  request key (prefix match, so the first 8–12 hex chars of a
+  ``request_key`` suffice); 404 when unknown.
 
 Determinism over the wire: responses are rendered with
 ``to_json(indent=None, sort_keys)`` — the same canonical serialization
@@ -34,6 +41,7 @@ import json
 import threading
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Optional
+from urllib.parse import parse_qs, urlsplit
 
 from ..obs import render_prometheus
 from .jobs import QueueFull, QueueShutdown
@@ -74,17 +82,45 @@ class _Handler(BaseHTTPRequestHandler):
                    retry_after=retry_after)
 
     def do_GET(self):  # noqa: N802 - stdlib handler name
-        """Route GETs: metrics, healthz, else 404."""
+        """Route GETs: metrics, healthz, debug/requests, else 404."""
         svc = self.server.service
-        if self.path == "/v1/metrics":
+        parts = urlsplit(self.path)
+        path = parts.path
+        if path == "/v1/metrics":
             self._send(200,
                        render_prometheus(svc.metrics_snapshot()).encode(),
                        content_type="text/plain; version=0.0.4")
-        elif self.path == "/v1/healthz":
+        elif path == "/v1/healthz":
             self._send_json(200, {
                 "status": "ok",
                 "inflight": svc._queue.inflight(),
                 "pending": svc._queue.pending()})
+        elif path == "/v1/debug/requests":
+            if not svc.flight.enabled:
+                self._send_json(404, {"error": "flight recorder disabled "
+                                               "(flight_cap=0)"})
+                return
+            q = parse_qs(parts.query)
+            try:
+                limit = int(q["limit"][0]) if "limit" in q else None
+            except ValueError:
+                self._send_json(400, {"error": "limit must be an int"})
+                return
+            slow_only = q.get("slow", ["0"])[0] not in ("0", "", "false")
+            recs = svc.flight.snapshot(limit=limit, slow_only=slow_only)
+            self._send_json(200, {"requests": recs, "count": len(recs)})
+        elif path.startswith("/v1/debug/requests/"):
+            if not svc.flight.enabled:
+                self._send_json(404, {"error": "flight recorder disabled "
+                                               "(flight_cap=0)"})
+                return
+            key = path[len("/v1/debug/requests/"):]
+            rec = svc.flight.get(key)
+            if rec is None:
+                self._send_json(404,
+                                {"error": f"no flight record for {key!r}"})
+            else:
+                self._send_json(200, rec)
         else:
             self._send_json(404, {"error": f"no route {self.path}"})
 

@@ -151,6 +151,62 @@ def test_render_prometheus_shape():
     assert render_prometheus({}) == ""
 
 
+def test_render_prometheus_labels_and_escaping():
+    """Prometheus text-exposition conformance: constant labels reach
+    every series (histogram buckets merge them with ``le``), and label
+    values escape backslash, double-quote and newline per the format
+    spec."""
+    from repro.obs import escape_label_value
+
+    assert escape_label_value('a"b') == 'a\\"b'
+    assert escape_label_value("a\\b") == "a\\\\b"
+    assert escape_label_value("a\nb") == "a\\nb"
+    reg = Registry()
+    reg.counter("c").inc(1)
+    reg.gauge("g").set(2)
+    reg.histogram("h", bounds=(1.0,)).observe(0.5)
+    text = render_prometheus(reg.snapshot(),
+                             labels={"net": 'res"net\n', "w": "a\\b"})
+    assert 'repro_c_total{net="res\\"net\\n",w="a\\\\b"} 1' in text
+    assert 'repro_g{net="res\\"net\\n",w="a\\\\b"} 2' in text
+    # bucket lines merge the constant labels with le=
+    assert 'le="1"' in text and 'net="res\\"net\\n"' in text
+    for line in text.splitlines():
+        if "_bucket" in line and "+Inf" not in line:
+            assert line.startswith('repro_h_bucket{')
+            assert 'le="1"' in line
+    # no labels: unchanged legacy shape
+    plain = render_prometheus(reg.snapshot())
+    assert "repro_c_total 1" in plain
+
+
+def test_trace_sink_concurrent_writes_no_torn_lines(tmp_path):
+    """N threads hammering one TraceSink must produce valid JSONL —
+    every line parses and every event arrives exactly once."""
+    import threading
+
+    path = str(tmp_path / "t.jsonl")
+    sink = TraceSink(path)
+    n_threads, n_events = 8, 200
+
+    def writer(tid):
+        for i in range(n_events):
+            sink.write({"ev": "event", "tid_": tid, "i": i,
+                        "pad": "x" * 100})
+
+    threads = [threading.Thread(target=writer, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    sink.close()
+    evs = _read_events(path)      # json.loads raises on a torn line
+    assert len(evs) == n_threads * n_events
+    seen = {(e["tid_"], e["i"]) for e in evs}
+    assert len(seen) == n_threads * n_events
+
+
 def test_render_report_sections():
     assert render_report({}) == "(no metrics recorded)\n"
     reg = Registry()
@@ -241,6 +297,113 @@ def test_trace_sink_reopens_after_close(tmp_path):
     sink.write({"b": 2})
     sink.close()
     assert len(_read_events(path)) == 2
+
+
+# ---------------------------------------------------------------------------
+# Flight recorder: bounded rings, slow-request retention, lookup.
+# ---------------------------------------------------------------------------
+
+def test_flight_recorder_ring_bounds_and_slow_retention():
+    from repro.obs import FlightRecorder
+
+    fr = FlightRecorder(cap=3, slow_threshold_s=0.5, slow_cap=2)
+    assert fr.enabled and len(fr) == 0
+    for i in range(5):
+        fr.record({"key": f"k{i}", "total_s": 0.1})
+    assert len(fr) == 3                        # ring evicted the oldest
+    snap = fr.snapshot()
+    assert [r["key"] for r in snap] == ["k4", "k3", "k2"]  # newest first
+    assert all(not r["slow"] for r in snap)
+    assert snap[0]["seq"] == 5                 # monotone sequence
+    # slow records keep full detail in the separate ring
+    fr.record({"key": "slow1", "total_s": 0.9},
+              detail={"request": {"network": "resnet18"}})
+    assert fr.snapshot()[0]["slow"]
+    slow = fr.snapshot(slow_only=True)
+    assert len(slow) == 1
+    assert slow[0]["request"] == {"network": "resnet18"}
+    # ...and survive main-ring rotation
+    for i in range(10):
+        fr.record({"key": f"x{i}", "total_s": 0.0})
+    assert fr.get("slow1")["request"] == {"network": "resnet18"}
+    # prefix match; unknown and empty keys are None
+    assert fr.get("slo")["key"] == "slow1"
+    assert fr.get("nope") is None and fr.get("") is None
+    # snapshot limit
+    assert len(fr.snapshot(limit=2)) == 2
+    json.dumps(fr.snapshot())
+
+
+def test_flight_recorder_cap_zero_is_noop():
+    from repro.obs import FlightRecorder
+
+    fr = FlightRecorder(cap=0)
+    assert not fr.enabled
+    fr.record({"key": "k", "total_s": 99.0})
+    assert len(fr) == 0 and fr.snapshot() == [] and fr.get("k") is None
+
+
+# ---------------------------------------------------------------------------
+# Sliding windows: recent quantiles, aging, SLO burn rate.
+# ---------------------------------------------------------------------------
+
+class _FakeClock:
+    """Deterministic monotonic clock for window tests."""
+
+    def __init__(self, t=1000.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+
+def test_window_histogram_quantiles_and_aging():
+    from repro.obs import WindowHistogram
+
+    clk = _FakeClock()
+    w = WindowHistogram(window_s=60.0, n_slots=12, clock=clk)
+    assert w.count() == 0 and w.quantile(0.5) == 0.0
+    for v in (0.010, 0.011, 0.012, 0.013):
+        w.observe(v)
+    assert w.count() == 4
+    assert w.quantile(0.5) == pytest.approx(0.012, rel=0.5)
+    assert w.mean() == pytest.approx(0.0115)
+    # half a window later the old slots are still live...
+    clk.t += 30.0
+    w.observe(0.5)
+    assert w.count() == 5
+    # ...a full window after the first batch, only the new one remains
+    clk.t += 31.0
+    assert w.count() == 1
+    assert w.quantile(0.99) == pytest.approx(0.5, rel=0.5)
+    # and past that, the window is empty again
+    clk.t += 61.0
+    assert w.count() == 0 and w.quantile(0.5) == 0.0
+    snap = w.snapshot()
+    assert snap["count"] == 0 and sum(snap["counts"]) == 0
+    json.dumps(snap)
+
+
+def test_slo_tracker_burn_rate():
+    from repro.obs import SLOTracker
+
+    clk = _FakeClock()
+    slo = SLOTracker(target_s=0.1, goal=0.9, window_s=60.0, clock=clk)
+    assert slo.burn_rate() == 0.0               # empty window
+    for _ in range(9):
+        slo.observe(0.05)                       # ok
+    slo.observe(0.5)                            # breach
+    assert slo.n_ok == 9 and slo.n_breach == 1
+    # 10% breaches against a 10% error budget: burning exactly at 1.0
+    assert slo.window_breach_rate() == pytest.approx(0.1)
+    assert slo.burn_rate() == pytest.approx(1.0)
+    snap = slo.snapshot()
+    assert snap["ok"] == 9 and snap["breach"] == 1
+    json.dumps(snap)
+    # the windowed rate ages out; the all-time counters do not
+    clk.t += 120.0
+    assert slo.burn_rate() == 0.0
+    assert slo.n_breach == 1
 
 
 # ---------------------------------------------------------------------------

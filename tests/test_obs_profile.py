@@ -1,0 +1,252 @@
+"""Trace analytics tests (repro.obs.profile) and the obs-profile CLI.
+
+Covers the parser's call-tree reconstruction (exit-order + per-thread
+depth adoption, sampled-out parents, old-format traces without
+``ts0``/``tid``), the attribution invariant (self times sum to the
+root total), the Chrome trace-event and folded-stack exports, and the
+graceful handling of empty/truncated/missing trace files the CLI
+relies on.
+"""
+import json
+import subprocess
+import sys
+import os
+
+import pytest
+
+from repro import obs
+from repro.obs import profile as pr
+
+
+@pytest.fixture(autouse=True)
+def _obs_clean():
+    obs.disable()
+    yield
+    obs.disable()
+
+
+def _write_trace(path, events):
+    with open(path, "w", encoding="utf-8") as fh:
+        for ev in events:
+            fh.write(json.dumps(ev) + "\n")
+
+
+def _span(name, ts0, dur, depth, tid=1, **attrs):
+    ev = {"ev": "span", "name": name, "ts": ts0 + dur, "ts0": ts0,
+          "dur_s": dur, "depth": depth, "tid": tid}
+    ev.update(attrs)
+    return ev
+
+
+def test_parse_trace_rebuilds_nesting(tmp_path):
+    # exit order: children before parents (spans are written at exit)
+    path = str(tmp_path / "t.jsonl")
+    _write_trace(path, [
+        _span("leaf_a", 10.0, 1.0, 1),
+        _span("leaf_b", 11.5, 0.5, 1),
+        _span("root", 10.0, 3.0, 0),
+    ])
+    t = pr.parse_trace(path)
+    assert t.n_spans == 3 and t.n_bad_lines == 0
+    assert [r.name for r in t.roots] == ["root"]
+    root = t.roots[0]
+    assert [c.name for c in root.children] == ["leaf_a", "leaf_b"]
+    assert root.self_s() == pytest.approx(1.5)
+    assert t.total_s() == pytest.approx(3.0)
+
+
+def test_parse_trace_threads_do_not_cross(tmp_path):
+    path = str(tmp_path / "t.jsonl")
+    _write_trace(path, [
+        _span("w1.leaf", 0.0, 1.0, 1, tid=1),
+        _span("w2.leaf", 0.0, 2.0, 1, tid=2),
+        _span("w1.root", 0.0, 1.5, 0, tid=1),
+        _span("w2.root", 0.0, 2.5, 0, tid=2),
+    ])
+    t = pr.parse_trace(path)
+    assert sorted(r.name for r in t.roots) == ["w1.root", "w2.root"]
+    for r in t.roots:
+        assert len(r.children) == 1
+        assert r.children[0].name.split(".")[0] == r.name.split(".")[0]
+
+
+def test_parse_trace_sampled_out_parent_flattens(tmp_path):
+    # depth-2 leaves whose depth-1 parent was sampled away attach to
+    # the depth-0 root instead of vanishing
+    path = str(tmp_path / "t.jsonl")
+    _write_trace(path, [
+        _span("deep", 0.0, 1.0, 2),
+        _span("root", 0.0, 4.0, 0),
+    ])
+    t = pr.parse_trace(path)
+    assert [c.name for c in t.roots[0].children] == ["deep"]
+    assert t.roots[0].self_s() == pytest.approx(3.0)
+
+
+def test_parse_trace_old_format_and_junk_lines(tmp_path):
+    # pre-ts0 traces (no start timestamp, no tid) still parse; junk
+    # lines and non-span events are counted/skipped, never fatal
+    path = str(tmp_path / "t.jsonl")
+    with open(path, "w", encoding="utf-8") as fh:
+        fh.write(json.dumps({"ev": "span", "name": "old", "ts": 100.0,
+                             "dur_s": 2.0, "depth": 0}) + "\n")
+        fh.write(json.dumps({"ev": "event", "name": "mark"}) + "\n")
+        fh.write("{this is not json\n")
+        fh.write('{"ev": "span", "name": "trunc', )  # torn tail
+    t = pr.parse_trace(path)
+    assert t.n_spans == 1 and t.n_bad_lines == 2
+    node = t.roots[0]
+    assert node.ts0 == pytest.approx(98.0)      # ts - dur_s fallback
+    assert node.tid == 0
+
+
+def test_parse_trace_missing_and_empty_files(tmp_path):
+    t = pr.parse_trace(str(tmp_path / "nope.jsonl"))
+    assert t.n_spans == 0 and t.roots == []
+    empty = tmp_path / "empty.jsonl"
+    empty.write_text("")
+    t = pr.parse_trace(str(empty))
+    assert t.n_spans == 0
+    assert "no spans" in pr.render_profile(t)
+
+
+def test_attribution_self_times_sum_to_root_total(tmp_path):
+    trace_path = str(tmp_path / "t.jsonl")
+    obs.enable(trace_path=trace_path)
+    with obs.span("root"):
+        with obs.span("phase_a"):
+            with obs.span("inner"):
+                pass
+        with obs.span("phase_b"):
+            pass
+    obs.disable()
+    t = pr.parse_trace(trace_path)
+    rows = pr.attribution(t)
+    total_self = sum(r["self_s"] for r in rows)
+    # the acceptance bar: per-name self times sum to the root span's
+    # duration within 1%
+    assert total_self == pytest.approx(t.total_s(), rel=0.01)
+    assert sum(r["self_pct"] for r in rows) == pytest.approx(100.0,
+                                                             rel=0.01)
+    assert {r["name"] for r in rows} \
+        == {"root", "phase_a", "phase_b", "inner"}
+
+
+def test_critical_path_descends_longest_child(tmp_path):
+    path = str(tmp_path / "t.jsonl")
+    _write_trace(path, [
+        _span("short", 0.0, 1.0, 1),
+        _span("long", 1.0, 3.0, 1),
+        _span("long.leaf", 1.0, 2.0, 2),
+        _span("root", 0.0, 5.0, 0),
+    ])
+    # exit order above is wrong for nesting (long.leaf exits after
+    # long) — rewrite in true exit order
+    _write_trace(path, [
+        _span("short", 0.0, 1.0, 1),
+        _span("long.leaf", 1.0, 2.0, 2),
+        _span("long", 1.0, 3.0, 1),
+        _span("root", 0.0, 5.0, 0),
+    ])
+    steps = pr.critical_path(pr.parse_trace(path))
+    assert [s["name"] for s in steps] == ["root", "long", "long.leaf"]
+
+
+def test_chrome_trace_export_shape(tmp_path):
+    path = str(tmp_path / "t.jsonl")
+    _write_trace(path, [
+        _span("leaf", 100.5, 0.25, 1, tid=7, net="resnet18"),
+        _span("root", 100.0, 1.0, 0, tid=7),
+    ])
+    doc = pr.chrome_trace(pr.parse_trace(path))
+    assert doc["displayTimeUnit"] == "ms"
+    evs = doc["traceEvents"]
+    assert len(evs) == 2
+    for e in evs:
+        assert e["ph"] == "X" and e["pid"] == 1 and e["tid"] == 7
+        assert e["ts"] >= 0 and e["dur"] > 0
+    leaf = next(e for e in evs if e["name"] == "leaf")
+    assert leaf["ts"] == pytest.approx(0.5e6)       # µs after root start
+    assert leaf["dur"] == pytest.approx(0.25e6)
+    assert leaf["args"] == {"net": "resnet18"}
+    json.dumps(doc)                                  # valid JSON
+
+
+def test_folded_stacks_cover_every_microsecond(tmp_path):
+    path = str(tmp_path / "t.jsonl")
+    _write_trace(path, [
+        _span("leaf", 0.0, 0.4, 1),
+        _span("root", 0.0, 1.0, 0),
+    ])
+    lines = pr.folded_stacks(pr.parse_trace(path))
+    parsed = dict(line.rsplit(" ", 1) for line in lines)
+    assert parsed == {"root": "600000", "root;leaf": "400000"}
+
+
+def test_render_profile_table(tmp_path):
+    path = str(tmp_path / "t.jsonl")
+    _write_trace(path, [
+        _span("leaf", 0.0, 0.4, 1),
+        _span("root", 0.0, 1.0, 0),
+    ])
+    text = pr.render_profile(pr.parse_trace(path), top=5)
+    assert "critical path:" in text
+    assert "root" in text and "leaf" in text
+    assert "100.0%" in text                  # (shown) covers everything
+
+
+def _run_cli(args, cwd):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(cwd, "src")
+    return subprocess.run(
+        [sys.executable, os.path.join(cwd, "benchmarks", "run.py")]
+        + args, capture_output=True, text=True, env=env, cwd=cwd)
+
+
+def test_obs_profile_cli_end_to_end(tmp_path):
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    trace = str(tmp_path / "t.jsonl")
+    _write_trace(trace, [
+        _span("leaf", 0.0, 0.4, 1),
+        _span("root", 0.0, 1.0, 0),
+    ])
+    chrome = str(tmp_path / "chrome.json")
+    folded = str(tmp_path / "folded.txt")
+    r = _run_cli(["obs-profile", "--trace", trace, "--chrome-out",
+                  chrome, "--folded-out", folded], repo)
+    assert r.returncode == 0, r.stderr
+    assert "critical path:" in r.stdout
+    doc = json.load(open(chrome, encoding="utf-8"))
+    assert len(doc["traceEvents"]) == 2
+    assert open(folded, encoding="utf-8").read().strip()
+
+
+def test_obs_profile_cli_missing_and_truncated(tmp_path):
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    r = _run_cli(["obs-profile", "--trace",
+                  str(tmp_path / "nope.jsonl")], repo)
+    assert r.returncode == 2
+    assert "no trace" in r.stderr
+    trunc = tmp_path / "trunc.jsonl"
+    trunc.write_text('{"ev": "span", "name": "cut')
+    r = _run_cli(["obs-profile", "--trace", str(trunc)], repo)
+    assert r.returncode == 0, r.stderr
+    assert "no spans" in r.stdout
+
+
+def test_obs_report_cli_corrupt_snapshot(tmp_path):
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    r = _run_cli(["obs-report", "--metrics", str(bad)], repo)
+    assert r.returncode == 2
+    assert "not a metrics snapshot" in r.stderr
+    empty = tmp_path / "empty.json"
+    empty.write_text("")
+    r = _run_cli(["obs-report", "--metrics", str(empty)], repo)
+    assert r.returncode == 2
+    lst = tmp_path / "list.json"
+    lst.write_text("[1, 2]")
+    r = _run_cli(["obs-report", "--metrics", str(lst)], repo)
+    assert r.returncode == 2
+    assert "JSON object" in r.stderr

@@ -106,6 +106,92 @@ def test_healthz_and_metrics(server):
     assert "# TYPE repro_serve_requests_total counter" in text
 
 
+def test_debug_requests_listing_and_lookup(server):
+    """GET /v1/debug/requests mirrors the flight recorder: listing,
+    ?limit/?slow filters, and the per-key prefix lookup; the listed
+    stage timings satisfy the stage identity."""
+    req = tiny_request()
+    _post(server.url, req.to_dict())
+    _post(server.url, req.to_dict())          # memo replay
+    code, body = _get(server.url, "/v1/debug/requests")
+    assert code == 200
+    d = json.loads(body)
+    assert d["count"] == 2
+    newest, oldest = d["requests"]
+    assert newest["served_from"] == "memo"    # newest first
+    assert oldest["served_from"] == "search"
+    assert oldest["admit_wait_s"] + oldest["evaluate_s"] \
+        + oldest["respond_s"] == pytest.approx(oldest["total_s"])
+    # stage sum vs the scraped latency histogram (the acceptance bar:
+    # equal up to the respond-stage epsilon); the memo hit contributes
+    # only its sub-ms replay
+    _, text = _get(server.url, "/v1/metrics")
+    line = [ln for ln in text.decode().splitlines()
+            if ln.startswith("repro_serve_request_seconds_sum")][0]
+    observed = float(line.split()[-1])
+    stage_sum = sum(r["admit_wait_s"] + r["evaluate_s"]
+                    for r in d["requests"])
+    eps = sum(r["respond_s"] for r in d["requests"])
+    assert abs(observed - stage_sum) <= eps + 0.05 * observed + 0.005
+    # limit + per-key lookup (prefix)
+    code, body = _get(server.url, "/v1/debug/requests?limit=1")
+    assert json.loads(body)["count"] == 1
+    key = req.cache_key()
+    code, body = _get(server.url, f"/v1/debug/requests/{key[:10]}")
+    assert code == 200
+    assert json.loads(body)["key"] == key
+    with pytest.raises(urllib.error.HTTPError) as ei:
+        _get(server.url, "/v1/debug/requests/ffffffffffffffff")
+    assert ei.value.code == 404
+    with pytest.raises(urllib.error.HTTPError) as ei:
+        _get(server.url, "/v1/debug/requests?limit=zz")
+    assert ei.value.code == 400
+
+
+def test_debug_requests_slow_ring_over_http():
+    svc = make_service(slow_threshold_s=0.0)   # everything is "slow"
+    srv = MappingHTTPServer(svc, port=0).start()
+    try:
+        _post(srv.url, tiny_request().to_dict())
+        code, body = _get(srv.url, "/v1/debug/requests?slow=1")
+        assert code == 200
+        d = json.loads(body)
+        assert d["count"] == 1
+        full = d["requests"][0]
+        assert full["slow"] and full["request"]["network"] == "resnet18"
+        assert "engine_delta" in full
+    finally:
+        srv.close()
+
+
+def test_debug_requests_404_when_disabled():
+    svc = make_service(flight_cap=0)
+    srv = MappingHTTPServer(svc, port=0).start()
+    try:
+        for path in ("/v1/debug/requests", "/v1/debug/requests/abc"):
+            with pytest.raises(urllib.error.HTTPError) as ei:
+                _get(srv.url, path)
+            assert ei.value.code == 404
+            assert "disabled" in json.loads(ei.value.read())["error"]
+    finally:
+        srv.close()
+
+
+def test_metrics_scrape_includes_window_gauges():
+    svc = make_service(slo_target_s=0.001)
+    srv = MappingHTTPServer(svc, port=0).start()
+    try:
+        _post(srv.url, tiny_request().to_dict())
+        _, text = _get(srv.url, "/v1/metrics")
+        text = text.decode()
+        assert "repro_serve_request_seconds_window_p50" in text
+        assert "repro_serve_request_seconds_window_p99" in text
+        assert "repro_serve_slo_burn_rate" in text
+        assert "repro_serve_slo_breach_total 1" in text
+    finally:
+        srv.close()
+
+
 def test_shed_is_429_with_retry_after():
     gate = threading.Event()
     svc = make_service(max_pending=1)

@@ -612,6 +612,168 @@ def test_response_from_dict_rejects_unknown_fields():
 
 
 # ---------------------------------------------------------------------------
+# Flight recorder + sliding windows: stage accounting, slow retention,
+# scrape-time gauges, and the determinism pin.
+# ---------------------------------------------------------------------------
+
+def test_flight_records_every_request_path():
+    """memo / search / coalesced / shed all leave a flight record with
+    the right provenance, and fresh-job stage timings satisfy the
+    identity admit + evaluate + respond == total."""
+    svc = make_service(max_pending=1)
+    gate = threading.Event()
+    blocker, _ = svc._queue.submit("blocker", lambda: gate.wait(60))
+    try:
+        while svc._queue.pending() != 0:
+            pass
+        req = tiny_request()
+        j1 = svc.submit(req)                       # -> search
+        j2 = svc.submit(req)                       # -> coalesced
+        assert j2 is j1
+        with pytest.raises(QueueFull):
+            svc.submit(tiny_request(seed=9))       # -> shed
+        gate.set()
+        j1.result(120)
+        svc.request(req)                           # -> memo
+    finally:
+        gate.set()
+        svc.close()
+    recs = svc.flight.snapshot()
+    by_src = {r["served_from"]: r for r in recs}
+    assert set(by_src) == {"search", "coalesced", "shed", "memo"}
+    assert by_src["shed"]["outcome"] == "shed"
+    search = by_src["search"]
+    assert search["outcome"] == "ok" and search["evaluated"] == 4
+    for stage in ("admit_wait_s", "evaluate_s", "respond_s"):
+        assert search[stage] >= 0.0
+    assert search["admit_wait_s"] + search["evaluate_s"] \
+        + search["respond_s"] == pytest.approx(search["total_s"])
+    # the blocker held the single worker: the search request's admit
+    # wait is real, not epsilon
+    assert search["admit_wait_s"] > 0.0
+    # memo/coalesced did no evaluate work
+    assert by_src["memo"]["evaluate_s"] == 0.0
+    assert by_src["coalesced"]["evaluate_s"] == 0.0
+    json.dumps(recs)                               # JSON-safe
+
+
+def test_flight_stage_sum_matches_request_seconds_histogram():
+    """Acceptance: a fresh request's admit_wait + evaluate equals the
+    serve.request_seconds observation for it, up to the respond-stage
+    epsilon (the histogram observes at the end of the evaluate stage;
+    t_finish lands after the respond hop)."""
+    svc = make_service()
+    try:
+        svc.request(tiny_request())
+    finally:
+        svc.close()
+    [rec] = [r for r in svc.flight.snapshot()
+             if r["served_from"] == "search"]
+    hist = svc.metrics_snapshot()["histograms"]["serve.request_seconds"]
+    assert hist["count"] == 1
+    stage_sum = rec["admit_wait_s"] + rec["evaluate_s"]
+    # observed value == sum of observations for a single request
+    assert abs(hist["sum"] - stage_sum) \
+        <= rec["respond_s"] + 0.05 * hist["sum"] + 0.005
+
+
+def test_flight_slow_request_keeps_full_detail():
+    """slow_threshold_s=0 marks every request slow: the slow ring keeps
+    the request dict, sweep summary and the engine stats delta."""
+    svc = make_service(slow_threshold_s=0.0)
+    try:
+        r1 = svc.request(tiny_request())
+    finally:
+        svc.close()
+    full = svc.flight.get(r1.request_key[:10])   # prefix lookup
+    assert full is not None and full["slow"]
+    assert full["request"]["network"] == "resnet18"
+    assert full["summary"] and full["frontier_size"] \
+        == len(r1.frontier_points)
+    delta = full["engine_delta"]
+    assert delta and all(isinstance(v, int) for v in delta.values())
+    assert delta.get("score_miss", 0) > 0        # the sweep's own work
+
+
+def test_flight_disabled_and_windows_disabled():
+    svc = make_service(flight_cap=0, window_s=0)
+    try:
+        svc.request(tiny_request())
+        snap = svc.metrics_snapshot()
+    finally:
+        svc.close()
+    assert not svc.flight.enabled
+    assert "flight" not in snap
+    assert "serve.request_seconds.window.p50" not in snap["gauges"]
+
+
+def test_window_gauges_and_slo_published_at_scrape():
+    svc = make_service(slo_target_s=0.001)   # everything breaches
+    try:
+        svc.request(tiny_request())
+        svc.request(tiny_request())          # memo: sub-ms, ok
+        snap = svc.metrics_snapshot()
+    finally:
+        svc.close()
+    g, c = snap["gauges"], snap["counters"]
+    assert g["serve.request_seconds.window.count"] == 2.0
+    assert g["serve.request_seconds.window.p99"] \
+        >= g["serve.request_seconds.window.p50"] >= 0.0
+    assert g["serve.slo.target_s"] == pytest.approx(0.001)
+    assert int(c["serve.slo.breach"]) == 1   # the real sweep
+    assert int(c["serve.slo.ok"]) == 1       # the memo replay
+    assert g["serve.slo.burn_rate"] > 0.0
+    # the snapshot renders through both surfaces without error
+    from repro.obs import render_prometheus, render_report
+    assert "flight recorder" in render_report(snap)
+    assert "repro_serve_slo_burn_rate" in render_prometheus(snap)
+
+
+def test_frontier_identical_with_flight_and_windows_toggled(tmp_path):
+    """Determinism pin (DESIGN.md Sections 12/14): the flight recorder
+    and the windows observe, never steer — the canonical frontier JSON
+    is byte-identical with them on, off, or in slow-everything mode."""
+    base = make_service(flight_cap=0, window_s=0)
+    try:
+        r_off = base.request(tiny_request())
+    finally:
+        base.close()
+    on = make_service(flight_cap=8, slow_threshold_s=0.0,
+                      window_s=30.0, slo_target_s=0.5)
+    try:
+        r_on = on.request(tiny_request())
+    finally:
+        on.close()
+    assert r_on.frontier_json == r_off.frontier_json
+
+    def strip_wall(d):
+        return {k: v for k, v in d.items() if k != "wall_s"}
+
+    # everything but the (inherently nondeterministic) wall clock
+    assert strip_wall(r_on.best) == strip_wall(r_off.best)
+    assert [strip_wall(p) for p in r_on.frontier_points] \
+        == [strip_wall(p) for p in r_off.frontier_points]
+    assert len(on.flight) == 1 and len(base.flight) == 0
+
+
+def test_jobs_stage_timestamps_are_telemetry_only():
+    """The queue stamps t_submit/t_eval_start/t_eval_end/t_finish in
+    stage order; a pre-completed job only has t_finish."""
+    q = JobQueue(max_workers=1)
+    try:
+        job, _ = q.submit("k", lambda: 41)
+        assert job.result(10) == 41
+        while job.t_finish is None:
+            time.sleep(0.001)
+        assert job.t_submit <= job.t_eval_start <= job.t_eval_end \
+            <= job.t_finish
+    finally:
+        q.shutdown()
+    done = Job.completed("m", 7)
+    assert done.t_finish is not None and done.t_submit is None
+
+
+# ---------------------------------------------------------------------------
 # Serve LM engine: the fast (non-compiling) sampling paths.
 # ---------------------------------------------------------------------------
 
