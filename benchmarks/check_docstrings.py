@@ -42,6 +42,9 @@ MODULES = [
     "repro.dse.distrib.coordinator",
     "repro.dse.distrib.lease",
     "repro.dse.distrib.worker",
+    "repro.workloads",
+    "repro.workloads.lowering",
+    "repro.workloads.scenarios",
     "repro.serve",
     "repro.serve.engine",
     "repro.serve.jobs",

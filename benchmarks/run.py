@@ -275,7 +275,10 @@ def _dse_parser() -> argparse.ArgumentParser:
         prog="run.py dse",
         description="Co-search PIM architectures x overlap mappings.")
     p.add_argument("--network", default="resnet18",
-                   help="network name, or 'all' for "
+                   help="network name, a zoo scenario "
+                        "('<arch>[:phase][@length][xblocks]', e.g. "
+                        "deepseek_moe_16b:prefill@2048 — see 'run.py "
+                        "workloads'), or 'all' for "
                         "resnet18/vgg16/bert_encoder x all modes")
     p.add_argument("--family", default="dram_pim", choices=sorted(SPACES))
     p.add_argument("--mode", default="transform", choices=MODES)
@@ -356,8 +359,9 @@ def dse_main(argv) -> None:
     args = _dse_parser().parse_args(argv)
     from benchmarks import record
     from repro.dse import (best_arch_table, execute_sweep, frontier_table,
-                           journal_template, objective_tag, shared_dir_for,
-                           summarize, sweep_networks, sweep_summary)
+                           journal_template, network_token, objective_tag,
+                           shared_dir_for, summarize, sweep_networks,
+                           sweep_summary)
 
     # one journal-naming scheme for both branches (repro.dse.driver —
     # shared with the mapping service); a literal --journal path has no
@@ -390,7 +394,8 @@ def dse_main(argv) -> None:
         print(best_arch_table(results))
         return
 
-    journal_path = template.format(network=args.network, mode=args.mode)
+    journal_path = template.format(network=network_token(args.network),
+                                   mode=args.mode)
     shared_dir = args.shared_dir or shared_dir_for(journal_path)
 
     if args.compact_journal:
@@ -512,7 +517,9 @@ def serve_dse_main(argv) -> None:
         description="Answer one deployment request ('best (arch, "
                     "mapping) for this network under this budget') "
                     "through the mapping service (repro.serve).")
-    p.add_argument("--network", default="resnet18")
+    p.add_argument("--network", default="resnet18",
+                   help="network name or zoo scenario (see 'run.py "
+                        "workloads')")
     p.add_argument("--family", default="dram_pim", choices=sorted(SPACES))
     p.add_argument("--mode", default="transform", choices=MODES)
     p.add_argument("--strategy", default="forward", choices=STRATEGIES)
@@ -682,6 +689,47 @@ def serve_http_main(argv) -> None:
                    if svc.flight.enabled else None)
 
 
+def workloads_main(argv) -> None:
+    """List the zoo scenarios the lowering layer serves (per-block layer
+    and MAC counts, plus the whole-model block multiplier)."""
+    p = argparse.ArgumentParser(
+        prog="run.py workloads",
+        description="List LLM workload scenarios (repro.workloads): "
+                    "every zoo arch x {prefill, decode} lowered to "
+                    "overlap-searchable LayerSpec networks. Any listed "
+                    "name (or the grammar '<arch>[:phase][@length]"
+                    "[xblocks]') works with 'dse --network', "
+                    "'serve-dse --network' and a MappingRequest.")
+    p.add_argument("--smoke", action="store_true",
+                   help="list the reduced smoke configs (CPU-test scale)")
+    p.add_argument("--arch", default=None,
+                   help="only scenarios of this zoo arch")
+    args = p.parse_args(argv)
+
+    from repro.configs import get_config
+    from repro.workloads import list_scenarios, parse_scenario, \
+        lower_scenario
+    print(f"{'scenario':44s} {'family':7s} {'layers':>6s} "
+          f"{'macs/block':>14s} {'blocks':>6s} {'macs/model':>14s}")
+    for name in list_scenarios(smoke=args.smoke):
+        sc = parse_scenario(name)
+        if args.arch and args.arch.replace("-", "_") not in (sc.arch_id,):
+            continue
+        cfg = sc.config()
+        layers, _ = lower_scenario(sc)
+        macs = sum(l.macs for l in layers)
+        if cfg.family in ("hybrid", "audio"):
+            # the lowered tranche mixes block kinds with different
+            # repeat counts (SSM vs shared-attention / enc vs dec), so
+            # a single whole-model multiplier would mislead
+            blocks_s, total_s = "mixed", "-"
+        else:
+            blocks_s = str(max(1, cfg.n_layers))
+            total_s = f"{macs * max(1, cfg.n_layers):,d}"
+        print(f"{name:44s} {cfg.family:7s} {len(layers):6d} "
+              f"{macs:14,d} {blocks_s:>6s} {total_s:>14s}")
+
+
 def main() -> None:
     argv = sys.argv[1:]
     if argv and argv[0] == "dse":
@@ -698,13 +746,15 @@ def main() -> None:
         obs_report_main(argv[1:])
     elif argv and argv[0] == "obs-profile":
         obs_profile_main(argv[1:])
+    elif argv and argv[0] == "workloads":
+        workloads_main(argv[1:])
     elif not argv or argv[0] == "bench":
         bench_main(argv[1:] if argv else [])
     else:
         print(f"unknown subcommand {argv[0]!r}; use 'bench', 'dse', "
               "'serve-dse', 'serve-http', 'dse-worker', "
-              "'dse-coordinator', 'obs-report' or 'obs-profile'",
-              file=sys.stderr)
+              "'dse-coordinator', 'obs-report', 'obs-profile' or "
+              "'workloads'", file=sys.stderr)
         sys.exit(2)
 
 

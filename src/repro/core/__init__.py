@@ -3,10 +3,11 @@ from .arch import ArchSpec, HBMTiming, Level, dram_pim, reram_pim, tpu_spatial
 from .dataspace import (DataSpaces, generate_analytical, generate_exhaustive,
                         locate_finish, locate_finish_exhaustive, rect_bounds)
 from .engine import OverlapEngine, optimize_network_engine
-from .interface import NetworkDesc, chain_edges, describe, optimize
+from .interface import (NetworkDesc, chain_edges, describe, known_network,
+                        optimize)
 from .mapping import Loop, Mapping, divisors, heuristic_mapping, \
     random_mapping
-from .overlap import (CoordMap, Edge, HeadFoldMap, HeadUnfoldMap,
+from .overlap import (CoordMap, Edge, FullMap, HeadFoldMap, HeadUnfoldMap,
                       IdentityMap, WeightMap, consumer_tiles,
                       max_step_in_rect, overlapped_end,
                       ready_steps_analytical, ready_steps_exhaustive,

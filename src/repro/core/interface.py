@@ -16,7 +16,7 @@ from .arch import ArchSpec, dram_pim
 from .overlap import (Edge, HeadFoldMap, HeadUnfoldMap, IdentityMap,
                       WeightMap)
 from .search import NetworkResult, SearchConfig, optimize_network
-from .workload import LayerSpec, bert_encoder, get_network
+from .workload import NETWORKS, LayerSpec, bert_encoder, get_network
 
 
 @dataclasses.dataclass
@@ -79,13 +79,46 @@ def resnet18_edges(layers: Sequence[LayerSpec]) -> List[List[Edge]]:
 
 
 def describe(name: str, **kw) -> NetworkDesc:
+    """Network name (or zoo scenario string) -> ``NetworkDesc``.
+
+    Core names (``resnet18``/``vgg16``/``resnet50``/``bert_encoder``)
+    resolve here; anything else is handed to the LLM lowering layer
+    (``repro.workloads``), whose scenario grammar is
+    ``<arch>[:phase][@length][xblocks]``. Keyword arguments are only
+    legal where something consumes them (bert shapes, scenario shapes) —
+    unconsumed kwargs raise instead of silently returning the default
+    network."""
     if name == "bert_encoder":
         return describe_bert(**kw)
-    layers = get_network(name)
-    if name == "resnet18":
+    if name in NETWORKS:
+        if kw:
+            raise TypeError(
+                f"describe({name!r}) takes no keyword arguments (got "
+                f"{sorted(kw)}); only bert_encoder and zoo scenarios "
+                "are parameterizable")
+        layers = get_network(name)
+        if name == "resnet18":
+            return NetworkDesc(name=name, layers=layers,
+                               edges=resnet18_edges(layers))
         return NetworkDesc(name=name, layers=layers,
-                           edges=resnet18_edges(layers))
-    return NetworkDesc(name=name, layers=layers, edges=chain_edges(layers))
+                           edges=chain_edges(layers))
+    # not a core network: the LLM workload lowering layer (lazy import —
+    # repro.workloads pulls in the model zoo, which imports jax)
+    from ..workloads import describe_scenario
+    return describe_scenario(name, **kw)
+
+
+def known_network(name: str) -> bool:
+    """Cheap existence check for request validation: True iff ``name``
+    is a core network or parses as a zoo scenario. No layers are built
+    (an unknown name must be rejectable without paying a lowering)."""
+    if name == "bert_encoder" or name in NETWORKS:
+        return True
+    try:
+        from ..workloads import is_scenario_name
+    except ImportError:          # zoo deps unavailable in this build
+        return False
+    return is_scenario_name(name)
 
 
 def describe_bert(seq: int = 512, d_model: int = 768, heads: int = 12,

@@ -140,34 +140,63 @@ class WeightMap(CoordMap):
     """Consumer *weight* tile -> producer output. Used for attention edges
     where a matmul's stationary operand (K^T in QK, V in AV) is produced by
     a sibling layer. ``kc_to`` maps (k range, c range, head range from the
-    row block) to producer (K, P) bounds."""
+    row block) to producer (K, P) bounds. ``group`` models GQA/MQA: query
+    head h reads KV head ``h // group`` (group = n_heads // n_kv_heads),
+    so the producer K offset uses the *grouped* head index — monotone in
+    h, which keeps the analytical max-corner argument intact."""
 
-    def __init__(self, seq: int, hd: int, kind: str):
+    def __init__(self, seq: int, hd: int, kind: str, group: int = 1):
         assert kind in ("qk_weight", "av_weight")
+        assert group >= 1
         self.seq, self.hd, self.kind = seq, hd, kind
+        self.group = group
 
     def key(self):
-        return ("weight", self.kind, self.seq, self.hd)
+        return ("weight", self.kind, self.seq, self.hd, self.group)
 
     def to_producer(self, producer, consumer, lo, hi):
         seq, hd = self.seq, self.hd
         r_lo, r_hi = lo["P"], hi["P"] - 1
-        h_lo, h_hi = r_lo // seq, r_hi // seq
+        h_lo, h_hi = (r_lo // seq) // self.group, \
+            (r_hi // seq) // self.group
         ready0 = np.zeros(r_lo.shape, dtype=bool)
         if self.kind == "qk_weight":
             # weight element (k=n, c) of head h <- k_proj output (P=n,
-            # K=h*hd+c)
+            # K=(h//group)*hd+c)
             k_lo = h_lo * hd + lo["C"]
             k_hi = h_hi * hd + hi["C"] - 1
             return ({"K": k_lo, "P": lo["K"], "Q": np.zeros_like(r_lo)},
                     {"K": k_hi + 1, "P": hi["K"], "Q": np.ones_like(r_lo)},
                     ready0)
         # av_weight: weight element (k=j, c=m) of head h <- v_proj output
-        # (P=m, K=h*hd+j)
+        # (P=m, K=(h//group)*hd+j)
         k_lo = h_lo * hd + lo["K"]
         k_hi = h_hi * hd + hi["K"] - 1
         return ({"K": k_lo, "P": lo["C"], "Q": np.zeros_like(r_lo)},
                 {"K": k_hi + 1, "P": hi["C"], "Q": np.ones_like(r_lo)},
+                ready0)
+
+
+class FullMap(CoordMap):
+    """Conservative edge: every consumer tile needs the producer's ENTIRE
+    output before it can start. Used where the element-level mapping has
+    no affine tile-to-tile structure — MoE routing/dispatch (which tokens
+    land in which expert slot depends on router *values*), expert-combine
+    scatter-adds, KV-cache appends in decode, SSD inter-chunk state
+    recurrences and token<->spatial flattenings. The projected rectangle
+    is the full [K, P, Q] output, so the ready step is the producer's
+    last step under both the analytical and exhaustive analyses."""
+
+    def key(self):
+        return ("full",)
+
+    def to_producer(self, producer, consumer, lo, hi):
+        z = np.zeros_like(lo["P"])
+        ready0 = np.zeros(z.shape, dtype=bool)
+        return ({"K": z, "P": z, "Q": z},
+                {"K": np.full_like(z, producer.K),
+                 "P": np.full_like(z, producer.P),
+                 "Q": np.full_like(z, producer.Q)},
                 ready0)
 
 

@@ -180,6 +180,17 @@ NETWORKS = {
 
 
 def get_network(name: str) -> List[LayerSpec]:
-    if name not in NETWORKS:
-        raise KeyError(f"unknown network {name!r}; have {sorted(NETWORKS)}")
-    return NETWORKS[name]()
+    """Layers of a core network, or of a zoo scenario string
+    (``repro.workloads`` grammar ``<arch>[:phase][@length][xblocks]``,
+    e.g. ``deepseek_moe_16b:prefill@2048``). Raises ``KeyError`` listing
+    both namespaces for unknown names."""
+    if name in NETWORKS:
+        return NETWORKS[name]()
+    try:  # lazy: the lowering layer imports the model zoo (jax)
+        from ..workloads import scenario_layers
+    except ImportError:
+        raise KeyError(
+            f"unknown network {name!r}; have {sorted(NETWORKS)} "
+            "(zoo scenarios unavailable: repro.workloads failed to "
+            "import)") from None
+    return scenario_layers(name)   # KeyError on unknown arch

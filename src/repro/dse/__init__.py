@@ -8,8 +8,8 @@ overlap analysis. See DESIGN.md Section 8.
 from .distrib import (DistribConfig, run_coordinator, run_distributed,
                       worker_loop)
 from .driver import (execute_sweep, frontier_points, journal_path_for,
-                     journal_template, objective_tag, shared_dir_for,
-                     sweep_summary)
+                     journal_template, network_token, objective_tag,
+                     shared_dir_for, sweep_summary)
 from .explore import (DSEConfig, DSEResult, EXPLORERS, ProposalStream,
                       evaluate_point, network_energy_pj, point_key,
                       proposal_stream, record_edp, run_dse)

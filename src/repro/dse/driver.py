@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import re
 from typing import Dict, Optional
 
 from .explore import DSEConfig, DSEResult, record_edp, run_dse
@@ -52,12 +53,21 @@ def journal_template(family: str, objective: str = "latency",
         + ".jsonl")
 
 
+def network_token(network: str) -> str:
+    """Filesystem token of a network/scenario name: the zoo scenario
+    grammar's ``:``/``@`` (``deepseek_moe_16b:prefill@2048``) and any
+    other shell-hostile character become ``-``. Identity for the core
+    network names, so their journal paths are unchanged."""
+    return re.sub(r"[^A-Za-z0-9_.\-]", "-", network)
+
+
 def journal_path_for(cfg: DSEConfig, root: str = JOURNAL_ROOT) -> str:
     """Resolved journal path of one sweep (``cfg.journal_path`` wins if
     set; otherwise the shared naming scheme)."""
     template = cfg.journal_path or journal_template(
         cfg.family, cfg.objective, cfg.blend_alpha, root)
-    return template.format(network=cfg.network, mode=cfg.mode)
+    return template.format(network=network_token(cfg.network),
+                           mode=cfg.mode)
 
 
 def shared_dir_for(journal_path: str) -> str:

@@ -107,6 +107,13 @@ class MappingRequest:
 
     def __post_init__(self):
         self.dse_config()   # delegate field validation to DSEConfig
+        from ..core.interface import known_network
+        if not known_network(self.network):
+            raise ValueError(
+                f"unknown network {self.network!r}: not a core network "
+                "and not a zoo scenario "
+                "('<arch>[:phase][@length][xblocks]', e.g. "
+                "'deepseek_moe_16b:prefill@2048')")
         if self.deadline_s is not None and self.deadline_s < 0:
             raise ValueError("deadline_s must be >= 0")
         if self.deadline_s is not None and self.distributed:
